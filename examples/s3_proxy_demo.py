@@ -1,0 +1,45 @@
+"""S3 wire-protocol demo (paper §4.3): start two regional proxies over one
+virtual store and drive them with plain HTTP -- any S3 SDK pointed at these
+endpoints would work the same way.
+
+    PYTHONPATH=src python examples/s3_proxy_demo.py
+"""
+
+import urllib.request
+
+from repro.core import VirtualStore, make_backends, pick_regions
+from repro.core.s3_proxy import S3Proxy
+
+
+def req(method, url, data=None, headers=None):
+    r = urllib.request.Request(url, data=data, method=method,
+                               headers=headers or {})
+    with urllib.request.urlopen(r, timeout=10) as resp:
+        return resp.status, resp.read()
+
+
+cat = pick_regions(3)
+store = VirtualStore(cat, make_backends(list(cat.region_names()), "memory"),
+                     mode="FB")
+aws, azure, gcp = cat.region_names()
+pa = S3Proxy(store, aws).start()
+pg = S3Proxy(store, gcp).start()
+print(f"proxy in {aws}:  {pa.endpoint}")
+print(f"proxy in {gcp}:  {pg.endpoint}\n")
+
+req("PUT", f"{pa.endpoint}/artifacts")
+st, _ = req("PUT", f"{pa.endpoint}/artifacts/model/ckpt-000100.npz",
+            data=b"\x93NUMPY" + b"\x00" * 4096)
+print("PUT via aws proxy ->", st,
+      "| replicas:", store.replica_regions("artifacts", "model/ckpt-000100.npz"))
+
+st, body = req("GET", f"{pg.endpoint}/artifacts/model/ckpt-000100.npz")
+print("GET via gcp proxy ->", st, f"({len(body)} bytes)",
+      "| replicas:", store.replica_regions("artifacts", "model/ckpt-000100.npz"))
+print(f"egress charged: ${store.transfers.dollars:.9f}")
+
+st, body = req("GET", f"{pg.endpoint}/artifacts?list-type=2&prefix=model/")
+print("LIST via gcp proxy ->", body.decode()[:120], "...")
+
+pa.stop(); pg.stop()
+print("\nproxies stopped (stateless: restart anywhere, the store is the truth)")

@@ -1,0 +1,15 @@
+"""Serving example: batched prefill+decode with the TTL-driven KV tier
+(DESIGN.md §5 hardware adaptation) -- shared system prompts hit the prefix
+cache; the adaptive TTL decides how long blocks stay resident.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch llama3.2-1b
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or
+                                ["--arch", "llama3.2-1b", "--requests", "6"])
+    main()

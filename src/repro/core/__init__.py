@@ -1,0 +1,42 @@
+"""SkyStore core: the paper's contribution (placement + adaptive TTL eviction).
+
+Public surface:
+  costmodel      -- region catalogs, egress matrices, T_even
+  histogram      -- 800-cell variable-granularity access histograms
+  ttl_policy     -- ExpectedCost(TTL), argmin scan, adaptive controller
+  policies       -- SkyStore + every §6.2.2 baseline
+  simulator      -- event-driven monetary-cost simulator
+  traces         -- synthetic IBM-trace profiles + workload types A-E
+  metadata       -- control plane (2PC, versioning, eviction scan, backup)
+  virtual_store  -- client-facing virtual bucket/object API
+  backends       -- physical per-region stores (memory / filesystem)
+"""
+
+from .costmodel import (  # noqa: F401
+    CostModel,
+    Region,
+    default_catalog,
+    paper_2region_catalog,
+    pick_regions,
+    tpu_tier_catalog,
+)
+from .histogram import AccessHistogram, RollingHistogram, cell_edges  # noqa: F401
+from .policies import Policy, make_policy  # noqa: F401
+from .simulator import CostReport, Simulator, run_policy  # noqa: F401
+from .traces import (  # noqa: F401
+    TRACE_NAMES,
+    WORKLOAD_KINDS,
+    Trace,
+    assign_two_region,
+    assign_workload,
+    generate_trace,
+)
+from .ttl_policy import (  # noqa: F401
+    AdaptiveTTLController,
+    choose_ttl,
+    choose_ttl_with_perf_value,
+    expected_cost_curve,
+)
+from .virtual_store import VirtualStore  # noqa: F401
+from .metadata import MetadataServer  # noqa: F401
+from .backends import FSBackend, InMemoryBackend, make_backends  # noqa: F401

@@ -1,0 +1,162 @@
+"""Physical object-store backends (the per-region stores SkyStore overlays).
+
+The data plane speaks a minimal S3-ish interface.  Two implementations:
+
+* :class:`InMemoryBackend` -- dict-backed, for tests and the cost simulator;
+* :class:`FSBackend`       -- a directory per region, used by the training
+  framework so checkpoints and data shards genuinely move through the store.
+
+Backends know nothing about placement; they are what the paper calls the
+"physical object stores" behind the S3-Proxy (§4.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import time
+from typing import Dict, Iterator, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HeadResult:
+    key: str
+    size: int
+    etag: str
+    last_modified: float
+
+
+class Backend:
+    """One physical region's object store."""
+
+    region: str
+
+    def put(self, bucket: str, key: str, data: bytes) -> HeadResult:
+        raise NotImplementedError
+
+    def get(self, bucket: str, key: str) -> bytes:
+        raise NotImplementedError
+
+    def head(self, bucket: str, key: str) -> HeadResult:
+        raise NotImplementedError
+
+    def delete(self, bucket: str, key: str) -> None:
+        raise NotImplementedError
+
+    def list(self, bucket: str, prefix: str = "") -> Iterator[HeadResult]:
+        raise NotImplementedError
+
+    def exists(self, bucket: str, key: str) -> bool:
+        try:
+            self.head(bucket, key)
+            return True
+        except KeyError:
+            return False
+
+    def copy_from(self, src: "Backend", bucket: str, key: str) -> HeadResult:
+        """Server-side-ish copy: the replication primitive of §2.3."""
+        return self.put(bucket, key, src.get(bucket, key))
+
+
+def _etag(data: bytes) -> str:
+    return hashlib.md5(data).hexdigest()
+
+
+class InMemoryBackend(Backend):
+    def __init__(self, region: str):
+        self.region = region
+        self._data: Dict[Tuple[str, str], Tuple[bytes, HeadResult]] = {}
+
+    def put(self, bucket, key, data):
+        h = HeadResult(key, len(data), _etag(data), time.time())
+        self._data[(bucket, key)] = (bytes(data), h)
+        return h
+
+    def get(self, bucket, key):
+        try:
+            return self._data[(bucket, key)][0]
+        except KeyError:
+            raise KeyError(f"{self.region}: {bucket}/{key} not found") from None
+
+    def head(self, bucket, key):
+        try:
+            return self._data[(bucket, key)][1]
+        except KeyError:
+            raise KeyError(f"{self.region}: {bucket}/{key} not found") from None
+
+    def delete(self, bucket, key):
+        self._data.pop((bucket, key), None)
+
+    def list(self, bucket, prefix=""):
+        for (b, k), (_d, h) in sorted(self._data.items()):
+            if b == bucket and k.startswith(prefix):
+                yield h
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(h.size for (_d, h) in self._data.values())
+
+
+class FSBackend(Backend):
+    """A local directory tree per region: <root>/<bucket>/<key>."""
+
+    def __init__(self, region: str, root: str):
+        self.region = region
+        self.root = os.path.join(root, region.replace(":", "_"))
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, bucket: str, key: str) -> str:
+        safe = key.replace("..", "_")
+        return os.path.join(self.root, bucket, safe)
+
+    def put(self, bucket, key, data):
+        p = self._path(bucket, key)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        tmp = p + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, p)            # atomic within the region
+        return HeadResult(key, len(data), _etag(data), time.time())
+
+    def get(self, bucket, key):
+        p = self._path(bucket, key)
+        if not os.path.exists(p):
+            raise KeyError(f"{self.region}: {bucket}/{key} not found")
+        with open(p, "rb") as f:
+            return f.read()
+
+    def head(self, bucket, key):
+        p = self._path(bucket, key)
+        if not os.path.exists(p):
+            raise KeyError(f"{self.region}: {bucket}/{key} not found")
+        st = os.stat(p)
+        return HeadResult(key, st.st_size, "", st.st_mtime)
+
+    def delete(self, bucket, key):
+        p = self._path(bucket, key)
+        if os.path.exists(p):
+            os.remove(p)
+
+    def list(self, bucket, prefix=""):
+        base = os.path.join(self.root, bucket)
+        if not os.path.isdir(base):
+            return
+        for dirpath, _dirs, files in os.walk(base):
+            for fn in sorted(files):
+                full = os.path.join(dirpath, fn)
+                key = os.path.relpath(full, base)
+                if key.startswith(prefix):
+                    st = os.stat(full)
+                    yield HeadResult(key, st.st_size, "", st.st_mtime)
+
+
+def make_backends(
+    regions: List[str], kind: str = "memory", root: Optional[str] = None
+) -> Dict[str, Backend]:
+    if kind == "memory":
+        return {r: InMemoryBackend(r) for r in regions}
+    if kind == "fs":
+        assert root is not None, "FS backends need a root directory"
+        return {r: FSBackend(r, root) for r in regions}
+    raise KeyError(kind)

@@ -1,0 +1,166 @@
+"""The 800-cell variable-granularity inter-access-time histogram (paper §3.2.3).
+
+Two resolutions:
+  * cells 0..59: one cell per second for the first minute;
+  * cells 60..: logarithmic with base 1.02 starting at one minute, so that two
+    consecutive candidate TTLs differ by <= 2% (and hence the storage-cost term,
+    which is linear in TTL, by <= 2% as well).  740 log cells cover
+    (1.02)**740 minutes -- years of range with an 800-cell table.
+
+Two weighted histograms are collected per (bucket, target region):
+  * ``hist(j)``  -- bytes of GETs whose inter-access gap T_next fell in range(j);
+  * ``last(j)``  -- bytes *not* re-read, bucketed by how long they have been
+    observed without a re-read (time from their final access to "now").
+
+We additionally track the weighted sum of gap times per cell so that the exact
+weighted mean t-hat(j) of Table 1 is available (the paper's expected-cost
+formula uses the *mean* time within the cell for the hit term, not the cell
+midpoint).
+
+Everything is numpy-vectorized; :mod:`repro.kernels.ttl_scan` consumes these
+arrays in batched (edges x cells) form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+#: Default construction parameters (paper §3.2.3).
+N_LINEAR = 60            # one-second cells
+N_LOG = 740              # log cells, base 1.02, starting at 60 s
+LOG_BASE = 1.02
+
+
+def cell_edges(
+    n_linear: int = N_LINEAR, n_log: int = N_LOG, base: float = LOG_BASE
+) -> np.ndarray:
+    """Upper boundaries t(j) of every cell, in seconds.  Shape (n_linear+n_log,).
+
+    Cell j covers (edges[j-1], edges[j]] with edges[-1] == 0.
+    """
+    lin = np.arange(1, n_linear + 1, dtype=np.float64)          # 1..60 s
+    log = 60.0 * base ** np.arange(1, n_log + 1, dtype=np.float64)
+    return np.concatenate([lin, log])
+
+
+@dataclasses.dataclass
+class AccessHistogram:
+    """One (bucket, region) pair's workload statistics (Table 1)."""
+
+    edges: np.ndarray                 # upper cell boundaries t(j), seconds
+    hist: np.ndarray                  # bytes re-read with gap in range(j)
+    time_weight: np.ndarray           # sum of gap * bytes, for exact t-hat(j)
+    last: np.ndarray                  # bytes not re-read, by observation age
+    first_read_remote_bytes: float    # bytes whose *initial* GET was remote
+    n_samples: int
+
+    @classmethod
+    def empty(cls, edges: np.ndarray | None = None) -> "AccessHistogram":
+        e = cell_edges() if edges is None else np.asarray(edges, dtype=np.float64)
+        z = np.zeros(e.shape[0], dtype=np.float64)
+        return cls(e, z.copy(), z.copy(), z.copy(), 0.0, 0)
+
+    # -- updates --------------------------------------------------------------
+    def cell_of(self, dt_seconds: np.ndarray) -> np.ndarray:
+        """Cell index for each gap; gaps beyond the last edge clamp to the top."""
+        dt = np.asarray(dt_seconds, dtype=np.float64)
+        idx = np.searchsorted(self.edges, dt, side="left")
+        return np.minimum(idx, self.edges.shape[0] - 1)
+
+    def add_gaps(self, dt_seconds: np.ndarray, size_bytes: np.ndarray) -> None:
+        """Record re-reads: object of size ``size_bytes`` re-read ``dt`` after
+        its previous access in this region."""
+        dt = np.atleast_1d(np.asarray(dt_seconds, dtype=np.float64))
+        sz = np.broadcast_to(
+            np.atleast_1d(np.asarray(size_bytes, dtype=np.float64)), dt.shape
+        )
+        cells = self.cell_of(dt)
+        np.add.at(self.hist, cells, sz)
+        np.add.at(self.time_weight, cells, sz * dt)
+        self.n_samples += dt.shape[0]
+
+    def add_last(self, age_seconds: np.ndarray, size_bytes: np.ndarray) -> None:
+        """Record not-yet-re-read bytes by their observation age."""
+        age = np.atleast_1d(np.asarray(age_seconds, dtype=np.float64))
+        sz = np.broadcast_to(
+            np.atleast_1d(np.asarray(size_bytes, dtype=np.float64)), age.shape
+        )
+        np.add.at(self.last, self.cell_of(age), sz)
+
+    def add_first_read(self, size_bytes: float, remote: bool) -> None:
+        if remote:
+            self.first_read_remote_bytes += float(size_bytes)
+
+    # -- views ------------------------------------------------------------------
+    def t_hat(self) -> np.ndarray:
+        """Exact weighted mean gap per cell; midpoint fallback for empty cells."""
+        lower = np.concatenate([[0.0], self.edges[:-1]])
+        mid = 0.5 * (lower + self.edges)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            m = np.where(self.hist > 0, self.time_weight / np.maximum(self.hist, 1e-30), mid)
+        return m
+
+    def merge(self, other: "AccessHistogram") -> "AccessHistogram":
+        if other.edges.shape != self.edges.shape or not np.allclose(other.edges, self.edges):
+            raise ValueError("histograms with different cell layouts")
+        return AccessHistogram(
+            self.edges,
+            self.hist + other.hist,
+            self.time_weight + other.time_weight,
+            self.last + other.last,
+            self.first_read_remote_bytes + other.first_read_remote_bytes,
+            self.n_samples + other.n_samples,
+        )
+
+    def decay(self, factor: float) -> None:
+        """Exponential aging used by the periodic re-collection (§3.2.3): the
+        previous histogram is kept but down-weighted as the new one fills up."""
+        self.hist *= factor
+        self.time_weight *= factor
+        self.last *= factor
+        self.first_read_remote_bytes *= factor
+
+    def as_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        return self.edges, self.hist, self.t_hat(), self.last
+
+    @property
+    def total_reread_bytes(self) -> float:
+        return float(self.hist.sum())
+
+    @property
+    def total_last_bytes(self) -> float:
+        return float(self.last.sum())
+
+
+class RollingHistogram:
+    """Periodic re-collection wrapper (§3.2.3).
+
+    Keeps a *current* and a *previous* window; TTL estimation always sees the
+    merged view, so a freshly rotated (near-empty) current window never starves
+    the policy.  ``rotate()`` is called by the metadata server once the current
+    window is longer than T_even (the paper's guidance: "the histogram should
+    be longer than the T_even time to be effective").
+    """
+
+    def __init__(self, edges: np.ndarray | None = None):
+        self.current = AccessHistogram.empty(edges)
+        self.previous: AccessHistogram | None = None
+        self.window_start = 0.0
+
+    def rotate(self, now: float) -> None:
+        self.previous = self.current
+        self.current = AccessHistogram.empty(self.current.edges)
+        self.window_start = now
+
+    def merged(self) -> AccessHistogram:
+        if self.previous is None:
+            return self.current
+        m = self.current.merge(self.previous)
+        # ``last`` is a point-in-time census (set by the snapshot scan), not an
+        # accumulating stream: only the current window's census is valid --
+        # merging both would double-count every paused object.
+        m.last = self.current.last.copy()
+        return m

@@ -1,0 +1,370 @@
+"""SkyStore control plane: the metadata server (paper §4.2).
+
+Tracks virtual buckets/objects, the mapping to physical replicas, versioning,
+per-(bucket, region) access statistics, and the TTL-driven eviction scan.  The
+data itself never flows through here (§4.2: "the control plane does not handle
+actual object data").
+
+Write protocol (§4.5): two-phase -- ``begin_upload`` logs the intent (replica
+state ``PENDING``), the data plane writes to the physical store, and
+``complete_upload`` commits; uncommitted mutations time out and roll back, so
+a crashed proxy can never leave dangling metadata pointing at missing data.
+
+Fault tolerance (§4.5): :meth:`backup` serializes the whole table into the
+object layer itself; :meth:`restore` rebuilds it, and :meth:`reconcile` scans
+physical stores to recover from an incomplete backup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from .costmodel import CostModel
+from .ttl_policy import AdaptiveTTLController
+
+PENDING, COMMITTED = "pending", "committed"
+
+
+@dataclasses.dataclass
+class ReplicaMeta:
+    region: str
+    status: str
+    created_at: float
+    last_access: float
+    ttl: float = float("inf")
+    pinned: bool = False
+    etag: str = ""
+    size: int = 0
+
+    @property
+    def expire(self) -> float:
+        return self.last_access + self.ttl
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ttl"] = None if np.isinf(self.ttl) else self.ttl
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ReplicaMeta":
+        d = dict(d)
+        d["ttl"] = float("inf") if d["ttl"] is None else d["ttl"]
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class VersionMeta:
+    version: int
+    size: int
+    etag: str
+    last_modified: float
+    replicas: Dict[str, ReplicaMeta]
+
+
+@dataclasses.dataclass
+class ObjectMeta:
+    bucket: str
+    key: str
+    base_region: Optional[str]
+    versions: List[VersionMeta]
+
+    @property
+    def latest(self) -> Optional[VersionMeta]:
+        return self.versions[-1] if self.versions else None
+
+
+class MetadataServer:
+    """Stateless-service semantics over an in-process table (the paper backs
+    this with Postgres; the table layout is the same)."""
+
+    def __init__(
+        self,
+        cost: CostModel,
+        mode: str = "FB",
+        controller: Optional[AdaptiveTTLController] = None,
+        pending_timeout: float = 300.0,
+        versioning: bool = True,
+    ) -> None:
+        self.cost = cost
+        self.mode = mode
+        self.ctl = controller or AdaptiveTTLController(cost)
+        self.pending_timeout = pending_timeout
+        self.versioning = versioning
+        self.objects: Dict[Tuple[str, str], ObjectMeta] = {}
+        self.buckets: Dict[str, dict] = {}
+        self._last_get: Dict[Tuple[str, str, str], float] = {}
+        self._pending: Dict[Tuple[str, str, str, int], float] = {}
+        self.op_log: List[dict] = []
+
+    # -- buckets ---------------------------------------------------------------
+    def create_bucket(self, bucket: str, **attrs) -> None:
+        self.buckets.setdefault(bucket, dict(created=time.time(), **attrs))
+
+    def list_buckets(self) -> List[str]:
+        return sorted(self.buckets)
+
+    def delete_bucket(self, bucket: str) -> None:
+        if any(b == bucket for (b, _k) in self.objects):
+            raise ValueError(f"bucket {bucket!r} not empty")
+        self.buckets.pop(bucket, None)
+
+    # -- 2PC writes ---------------------------------------------------------------
+    def begin_upload(
+        self, bucket: str, key: str, region: str, size: int, now: Optional[float] = None
+    ) -> int:
+        """Phase 1: log the intent; returns the version this upload will commit."""
+        now = time.time() if now is None else now
+        if bucket not in self.buckets:
+            raise KeyError(f"no such bucket {bucket!r}")
+        om = self.objects.get((bucket, key))
+        if om is None:
+            om = ObjectMeta(bucket, key, None, [])
+            self.objects[(bucket, key)] = om
+        version = (om.latest.version + 1) if om.latest else 1
+        self._pending[(bucket, key, region, version)] = now
+        self.op_log.append(
+            dict(op="begin_upload", bucket=bucket, key=key, region=region,
+                 version=version, t=now)
+        )
+        return version
+
+    def complete_upload(
+        self, bucket: str, key: str, region: str, version: int, size: int,
+        etag: str, now: Optional[float] = None,
+    ) -> VersionMeta:
+        """Phase 2: commit -- only now does the object become visible (§4.5)."""
+        now = time.time() if now is None else now
+        if (bucket, key, region, version) not in self._pending:
+            raise KeyError("complete_upload without matching begin_upload")
+        del self._pending[(bucket, key, region, version)]
+        om = self.objects[(bucket, key)]
+        if om.base_region is None:
+            om.base_region = region          # write-local fixes the FB base
+        vm = next((v for v in om.versions if v.version == version), None)
+        if vm is None:
+            vm = VersionMeta(version, size, etag, now, {})
+            om.versions.append(vm)
+            om.versions.sort(key=lambda v: v.version)
+            if not self.versioning and len(om.versions) > 1:
+                om.versions = om.versions[-1:]       # last-writer-wins
+        pinned = self.mode == "FB" and region == om.base_region
+        vm.replicas[region] = ReplicaMeta(
+            region, COMMITTED, now, now, float("inf"), pinned, etag, size
+        )
+        self.op_log.append(
+            dict(op="complete_upload", bucket=bucket, key=key, region=region,
+                 version=version, t=now)
+        )
+        return vm
+
+    def abort_upload(self, bucket: str, key: str, region: str, version: int) -> None:
+        self._pending.pop((bucket, key, region, version), None)
+        self.op_log.append(dict(op="abort_upload", bucket=bucket, key=key,
+                                region=region, version=version))
+
+    def expire_pending(self, now: Optional[float] = None) -> List[Tuple]:
+        """Roll back uploads whose proxy died mid-write (§4.5 timeout)."""
+        now = time.time() if now is None else now
+        stale = [k for k, t0 in self._pending.items()
+                 if now - t0 > self.pending_timeout]
+        for k in stale:
+            del self._pending[k]
+        return stale
+
+    # -- reads ----------------------------------------------------------------------
+    def locate(
+        self, bucket: str, key: str, region: str, now: Optional[float] = None,
+        version: Optional[int] = None,
+    ) -> Tuple[VersionMeta, str, bool]:
+        """Route a GET: returns (version, source region, was_local_hit) --
+        cheapest committed replica per §2.3, directed at the latest version."""
+        now = time.time() if now is None else now
+        om = self.objects.get((bucket, key))
+        if om is None or not om.versions:
+            raise KeyError(f"{bucket}/{key} not found")
+        vm = (om.latest if version is None
+              else next(v for v in om.versions if v.version == version))
+        alive = {
+            r: m for r, m in vm.replicas.items()
+            if m.status == COMMITTED and (m.pinned or m.expire > now)
+        }
+        if not alive:
+            alive = {r: m for r, m in vm.replicas.items() if m.status == COMMITTED}
+        if not alive:
+            raise KeyError(f"{bucket}/{key} has no committed replica")
+        hit = region in alive
+        src = region if hit else self.cost.cheapest_source(alive, region)
+        return vm, src, hit
+
+    def record_get(
+        self, bucket: str, key: str, region: str, size: int, hit: bool,
+        now: Optional[float] = None,
+    ) -> None:
+        now = time.time() if now is None else now
+        gk = (bucket, key, region)
+        prev = self._last_get.get(gk)
+        if prev is not None:
+            self.ctl.record_gap(bucket, region, now - prev, size)
+        else:
+            self.ctl.record_first_read(bucket, region, size, remote=not hit)
+        self._last_get[gk] = now
+
+    def commit_replica(
+        self, bucket: str, key: str, region: str, size: int, etag: str,
+        now: Optional[float] = None,
+    ) -> ReplicaMeta:
+        """Register a replicate-on-read copy with its adaptive TTL (§3.3.1)."""
+        now = time.time() if now is None else now
+        om = self.objects[(bucket, key)]
+        vm = om.latest
+        holders = {
+            r: (float("inf") if m.pinned else m.expire)
+            for r, m in vm.replicas.items()
+            if m.status == COMMITTED
+        }
+        ttl = self._object_ttl(bucket, region, holders, now)
+        pinned = self.mode == "FB" and region == om.base_region
+        rm = ReplicaMeta(region, COMMITTED, now, now, ttl, pinned, etag, size)
+        vm.replicas[region] = rm
+        return rm
+
+    def touch_replica(self, bucket: str, key: str, region: str,
+                      now: Optional[float] = None) -> None:
+        """TTL reset on access (§3.2.1)."""
+        now = time.time() if now is None else now
+        om = self.objects[(bucket, key)]
+        vm = om.latest
+        rm = vm.replicas.get(region)
+        if rm is None:
+            return
+        holders = {
+            r: (float("inf") if m.pinned else m.expire)
+            for r, m in vm.replicas.items() if m.status == COMMITTED
+        }
+        rm.last_access = now
+        if not rm.pinned:
+            rm.ttl = self._object_ttl(bucket, region, holders, now)
+
+    def _object_ttl(self, bucket: str, region: str, holders: Dict[str, float],
+                    now: float) -> float:
+        edge = {
+            s: self.ctl.edge_ttl(bucket, s, region, now)
+            for s in holders if s != region
+        }
+        if not edge:
+            return float("inf")
+        safe = {s: t for s, t in edge.items() if holders.get(s, 0) >= now + t}
+        pool = safe or {s: t for s, t in edge.items() if np.isinf(holders.get(s, 0))} or edge
+        return float(min(pool.values()))
+
+    # -- eviction scan (§4.2 background process) -----------------------------------
+    def scan_expired(self, now: Optional[float] = None) -> List[Tuple[str, str, str, int]]:
+        """Return (bucket, key, region, version) of replicas to DELETE.  The
+        caller (proxy / lifecycle worker) performs the physical deletes; we
+        only mutate metadata -- "no data transfer occurs" (§4.2)."""
+        now = time.time() if now is None else now
+        out = []
+        for (bucket, key), om in self.objects.items():
+            for vm in om.versions:
+                alive = [m for m in vm.replicas.values() if m.status == COMMITTED]
+                for r, m in list(vm.replicas.items()):
+                    if m.pinned or m.status != COMMITTED:
+                        continue
+                    if m.expire <= now and len(alive) > 1:
+                        del vm.replicas[r]
+                        alive.remove(m)
+                        out.append((bucket, key, r, vm.version))
+        return out
+
+    def delete_object(self, bucket: str, key: str) -> List[Tuple[str, int]]:
+        om = self.objects.pop((bucket, key), None)
+        if om is None:
+            return []
+        return [
+            (m.region, vm.version)
+            for vm in om.versions
+            for m in vm.replicas.values()
+        ]
+
+    def list_objects(self, bucket: str, prefix: str = "") -> List[ObjectMeta]:
+        return [
+            om for (b, k), om in sorted(self.objects.items())
+            if b == bucket and k.startswith(prefix)
+        ]
+
+    def head_object(self, bucket: str, key: str) -> ObjectMeta:
+        om = self.objects.get((bucket, key))
+        if om is None:
+            raise KeyError(f"{bucket}/{key} not found")
+        return om
+
+    # -- fault tolerance (§4.5) ------------------------------------------------------
+    def backup(self) -> bytes:
+        doc = {
+            "buckets": self.buckets,
+            "objects": [
+                {
+                    "bucket": om.bucket,
+                    "key": om.key,
+                    "base_region": om.base_region,
+                    "versions": [
+                        {
+                            "version": vm.version,
+                            "size": vm.size,
+                            "etag": vm.etag,
+                            "last_modified": vm.last_modified,
+                            "replicas": {r: m.to_json() for r, m in vm.replicas.items()},
+                        }
+                        for vm in om.versions
+                    ],
+                }
+                for om in self.objects.values()
+            ],
+        }
+        return json.dumps(doc).encode()
+
+    @classmethod
+    def restore(cls, blob: bytes, cost: CostModel, mode: str = "FB") -> "MetadataServer":
+        doc = json.loads(blob.decode())
+        ms = cls(cost, mode=mode)
+        ms.buckets = dict(doc["buckets"])
+        for o in doc["objects"]:
+            om = ObjectMeta(o["bucket"], o["key"], o["base_region"], [])
+            for v in o["versions"]:
+                om.versions.append(
+                    VersionMeta(
+                        v["version"], v["size"], v["etag"], v["last_modified"],
+                        {r: ReplicaMeta.from_json(m) for r, m in v["replicas"].items()},
+                    )
+                )
+            ms.objects[(om.bucket, om.key)] = om
+        return ms
+
+    def reconcile(self, backends: Dict[str, "object"]) -> int:
+        """Rebuild metadata for objects found in physical stores but missing
+        from the table (recovery from an incomplete backup, §4.5)."""
+        found = 0
+        for region, be in backends.items():
+            for bucket in self.buckets:
+                for h in be.list(bucket):
+                    om = self.objects.get((bucket, h.key))
+                    if om is None:
+                        om = ObjectMeta(bucket, h.key, region, [])
+                        self.objects[(bucket, h.key)] = om
+                    if not om.versions:
+                        om.versions.append(
+                            VersionMeta(1, h.size, h.etag, h.last_modified, {})
+                        )
+                    vm = om.latest
+                    if region not in vm.replicas:
+                        vm.replicas[region] = ReplicaMeta(
+                            region, COMMITTED, h.last_modified, h.last_modified,
+                            float("inf"), region == om.base_region, h.etag, h.size,
+                        )
+                        found += 1
+        return found

@@ -1,0 +1,201 @@
+"""S3-wire-protocol HTTP proxy (paper §4.3).
+
+The paper's data plane is an S3-compatible proxy "allowing users to
+seamlessly port applications using the S3 interface".  This is that server:
+a threaded HTTP endpoint speaking the S3 REST dialect over a
+:class:`~repro.core.virtual_store.VirtualStore`, so any S3 client pointed at
+``http://host:port`` talks to the multi-cloud virtual store.  One proxy runs
+per client region (write-local / replicate-on-read semantics come from the
+store); the proxy itself is stateless (§4.3) — kill it and start another.
+
+Operations (the §4.3 surface):
+  PUT    /bucket                       -> create bucket
+  DELETE /bucket                       -> delete bucket
+  GET    /                             -> list buckets
+  GET    /bucket?list-type=2&prefix=p  -> list objects
+  PUT    /bucket/key                   -> put object (write-local)
+  PUT    /bucket/key  + x-amz-copy-source -> copy object
+  GET    /bucket/key                   -> get object (replicate-on-read)
+  HEAD   /bucket/key                   -> head object
+  DELETE /bucket/key                   -> delete object
+  POST   /bucket/key?uploads           -> create multipart upload
+  PUT    /bucket/key?uploadId&partNumber -> upload part
+  POST   /bucket/key?uploadId          -> complete multipart upload
+  DELETE /bucket/key?uploadId          -> abort multipart upload
+"""
+
+from __future__ import annotations
+
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional, Tuple
+from urllib.parse import parse_qs, unquote, urlparse
+from xml.sax.saxutils import escape
+
+from .virtual_store import VirtualStore
+
+
+def _xml(body: str) -> bytes:
+    return ('<?xml version="1.0" encoding="UTF-8"?>' + body).encode()
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    store: VirtualStore = None      # injected by make_server
+    region: str = None
+
+    # -- plumbing -----------------------------------------------------------
+    def log_message(self, fmt, *args):   # quiet by default
+        pass
+
+    def _split(self) -> Tuple[str, Optional[str], dict]:
+        u = urlparse(self.path)
+        parts = u.path.lstrip("/").split("/", 1)
+        bucket = unquote(parts[0]) if parts[0] else None
+        key = unquote(parts[1]) if len(parts) > 1 and parts[1] else None
+        return bucket, key, parse_qs(u.query, keep_blank_values=True)
+
+    def _reply(self, code: int, body: bytes = b"",
+               ctype: str = "application/xml", headers: dict = None):
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        if body:
+            self.wfile.write(body)
+
+    def _error(self, code: int, s3code: str, msg: str):
+        self._reply(code, _xml(
+            f"<Error><Code>{s3code}</Code><Message>{escape(msg)}</Message></Error>"))
+
+    def _body(self) -> bytes:
+        n = int(self.headers.get("Content-Length", 0))
+        return self.rfile.read(n) if n else b""
+
+    # -- verbs ---------------------------------------------------------------
+    def do_GET(self):
+        bucket, key, q = self._split()
+        try:
+            if bucket is None:                        # ListBuckets
+                items = "".join(
+                    f"<Bucket><Name>{escape(b)}</Name></Bucket>"
+                    for b in self.store.list_buckets())
+                self._reply(200, _xml(
+                    f"<ListAllMyBucketsResult><Buckets>{items}</Buckets>"
+                    "</ListAllMyBucketsResult>"))
+            elif key is None:                         # ListObjectsV2
+                prefix = q.get("prefix", [""])[0]
+                keys = self.store.list_objects(bucket, prefix)
+                items = "".join(
+                    f"<Contents><Key>{escape(k)}</Key><Size>"
+                    f"{self.store.head_object(bucket, k).size}</Size></Contents>"
+                    for k in keys)
+                self._reply(200, _xml(
+                    f"<ListBucketResult><Name>{escape(bucket)}</Name>"
+                    f"<KeyCount>{len(keys)}</KeyCount>{items}"
+                    "</ListBucketResult>"))
+            else:                                     # GetObject
+                data = self.store.get_object(bucket, key, self.region)
+                self._reply(200, data, "application/octet-stream")
+        except KeyError as e:
+            self._error(404, "NoSuchKey", str(e))
+
+    def do_HEAD(self):
+        bucket, key, _q = self._split()
+        try:
+            h = self.store.head_object(bucket, key)
+            self.send_response(200)
+            self.send_header("Content-Length", str(h.size))
+            self.send_header("ETag", f'"{h.etag}"')
+            self.end_headers()
+        except KeyError:
+            self.send_response(404)
+            self.send_header("Content-Length", "0")
+            self.end_headers()
+
+    def do_PUT(self):
+        bucket, key, q = self._split()
+        try:
+            if key is None:                           # CreateBucket
+                self.store.create_bucket(bucket)
+                self._reply(200)
+            elif "partNumber" in q and "uploadId" in q:   # UploadPart
+                etag = self.store.upload_part(
+                    q["uploadId"][0], int(q["partNumber"][0]), self._body())
+                self._reply(200, headers={"ETag": f'"{etag}"'})
+            elif "x-amz-copy-source" in self.headers:     # CopyObject
+                src = unquote(self.headers["x-amz-copy-source"]).lstrip("/")
+                sb, sk = src.split("/", 1)
+                if sb != bucket:
+                    raise KeyError("cross-bucket copy not supported")
+                self.store.copy_object(bucket, sk, key, self.region)
+                self._reply(200, _xml("<CopyObjectResult/>"))
+            else:                                     # PutObject
+                v = self.store.put_object(bucket, key, self._body(),
+                                          self.region)
+                self._reply(200, headers={"x-amz-version-id": str(v)})
+        except KeyError as e:
+            self._error(404, "NoSuchKey", str(e))
+
+    def do_POST(self):
+        bucket, key, q = self._split()
+        try:
+            if "uploads" in q:                        # CreateMultipartUpload
+                uid = self.store.create_multipart_upload(bucket, key,
+                                                         self.region)
+                self._reply(200, _xml(
+                    f"<InitiateMultipartUploadResult><UploadId>{uid}"
+                    "</UploadId></InitiateMultipartUploadResult>"))
+            elif "uploadId" in q:                     # CompleteMultipartUpload
+                self._body()                          # part list (unchecked)
+                self.store.complete_multipart_upload(
+                    bucket, key, self.region, q["uploadId"][0])
+                self._reply(200, _xml("<CompleteMultipartUploadResult/>"))
+            else:
+                self._error(400, "InvalidRequest", "unsupported POST")
+        except KeyError as e:
+            self._error(404, "NoSuchUpload", str(e))
+
+    def do_DELETE(self):
+        bucket, key, q = self._split()
+        try:
+            if key is None:
+                self.store.delete_bucket(bucket)
+            elif "uploadId" in q:
+                self.store.abort_multipart_upload(q["uploadId"][0])
+            else:
+                self.store.delete_object(bucket, key)
+            self._reply(204)
+        except (KeyError, ValueError) as e:
+            self._error(409, "Conflict", str(e))
+
+
+class S3Proxy:
+    """One region's stateless S3 endpoint over the virtual store."""
+
+    def __init__(self, store: VirtualStore, region: str,
+                 host: str = "127.0.0.1", port: int = 0):
+        handler = type("BoundHandler", (_Handler,),
+                       {"store": store, "region": region})
+        self.httpd = ThreadingHTTPServer((host, port), handler)
+        self.region = region
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def endpoint(self) -> str:
+        host, port = self.httpd.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def start(self) -> "S3Proxy":
+        self._thread = threading.Thread(target=self.httpd.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        if self._thread:
+            self._thread.join(timeout=5)

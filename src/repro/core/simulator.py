@@ -1,0 +1,412 @@
+"""Event-driven monetary-cost simulator (paper §5 "1.9k lines of Python to
+estimate the total cost of each of these policies across traces").
+
+The simulator owns the mechanics every policy shares:
+
+  * write-local PUTs (optionally sync-replicated to the FB base on cross-region
+    overwrite, matching §4.4 last-writer-wins semantics);
+  * GETs served from the cheapest replica-holding region (§2.3), charged the
+    edge's egress price on a miss;
+  * replicate-on-read (if the policy says so) and TTL bookkeeping with reset-
+    on-access (§3.2.1), via a lazy expiration heap;
+  * FB/FP invariants: the base replica is pinned; the sole remaining FP copy
+    is never evicted (its expiry is re-armed);
+  * storage accounting integrated per replica lifetime [start, evict), capped
+    at the trace horizon so infinite-TTL policies remain finite;
+  * per-GET latency estimates from the cost model (Table 6);
+  * oracle precomputation for CGP and the SPANStore epoch solver.
+
+Traces are numpy structured arrays (see :mod:`repro.core.traces`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .costmodel import CostModel
+from .policies import GetContext, Oracle, Policy, SPANStore
+
+OP_PUT, OP_GET, OP_DELETE = 0, 1, 2
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class Replica:
+    region: str
+    start: float
+    last_access: float
+    ttl: float
+    expire: float
+    pinned: bool = False
+    gen: int = 0          # heap-entry validity token
+
+
+@dataclasses.dataclass
+class ObjectState:
+    size: float
+    bucket: str
+    base_region: Optional[str]
+    replicas: Dict[str, Replica]
+    version: int = 0
+
+
+@dataclasses.dataclass
+class CostReport:
+    policy: str
+    mode: str
+    storage: float = 0.0        # evictable (cache-side) replica storage
+    storage_base: float = 0.0   # pinned FB base replicas -- identical across
+    # policies by construction (§3.1 compares cache-side cost + egress only)
+    network: float = 0.0
+    ops: float = 0.0
+    n_get: int = 0
+    n_put: int = 0
+    n_hit: int = 0
+    n_miss: int = 0
+    n_evictions: int = 0
+    n_replications: int = 0
+    get_latency_ms: List[float] = dataclasses.field(default_factory=list)
+    put_latency_ms: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def total(self) -> float:
+        """Full bill, base replicas included."""
+        return self.storage + self.storage_base + self.network + self.ops
+
+    @property
+    def policy_cost(self) -> float:
+        """The §3.1 objective: costs the policy can influence (cache-side
+        storage + network + ops).  FB base storage is constant across
+        policies and excluded; in FP mode there are no pinned replicas and
+        ``policy_cost == total``."""
+        return self.storage + self.network + self.ops
+
+    def latency_stats(self) -> Dict[str, float]:
+        out = {}
+        for name, xs in (("get", self.get_latency_ms), ("put", self.put_latency_ms)):
+            if xs:
+                a = np.asarray(xs)
+                out[f"{name}_avg"] = float(a.mean())
+                out[f"{name}_p90"] = float(np.percentile(a, 90))
+                out[f"{name}_p99"] = float(np.percentile(a, 99))
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "policy": self.policy,
+            "mode": self.mode,
+            "total": self.total,
+            "policy_cost": self.policy_cost,
+            "storage": self.storage,
+            "storage_base": self.storage_base,
+            "network": self.network,
+            "ops": self.ops,
+            "hit_rate": self.n_hit / max(self.n_get, 1),
+        }
+
+
+class Simulator:
+    def __init__(
+        self,
+        cost: CostModel,
+        policy: Policy,
+        mode: str = "FB",
+        scan_interval: float = 24 * 3600.0,
+        charge_ops: bool = True,
+        track_latency: bool = False,
+        min_fp_copies: int = 1,
+    ) -> None:
+        if mode not in ("FB", "FP"):
+            raise ValueError("mode must be FB or FP")
+        self.cost = cost
+        self.policy = policy
+        self.mode = getattr(policy, "mode", mode) if getattr(policy, "mode", None) else mode
+        self.scan_interval = scan_interval
+        self.charge_ops = charge_ops
+        self.track_latency = track_latency
+        self.min_fp_copies = min_fp_copies
+
+        self.objects: Dict[int, ObjectState] = {}
+        self._heap: List[Tuple[float, int, str, int]] = []
+        self._last_get: Dict[Tuple[int, str], float] = {}
+        # (bucket, region) -> {obj: (last_get_time, size)} with no later GET yet
+        self._open_last: Dict[Tuple[str, str], Dict[int, Tuple[float, float]]] = {}
+        self.report = CostReport(policy.name, self.mode)
+        self._horizon = 0.0
+
+    # -- accounting -------------------------------------------------------------
+    def _charge_storage(self, obj: ObjectState, rep: Replica, end: float) -> None:
+        end = min(end, self._horizon) if self._horizon else end
+        c = self.cost.storage_cost(rep.region, obj.size, end - rep.start)
+        if rep.pinned:
+            self.report.storage_base += c
+        else:
+            self.report.storage += c
+
+    def _charge_transfer(self, src: str, dst: str, size: float) -> None:
+        self.report.network += self.cost.transfer_cost(src, dst, size)
+
+    def _charge_op(self, region: str, op: str) -> None:
+        if self.charge_ops:
+            self.report.ops += self.cost.op_cost(region, op)
+
+    # -- replica lifecycle ---------------------------------------------------------
+    def _add_replica(
+        self, oid: int, obj: ObjectState, region: str, now: float, ttl: float,
+        pinned: bool = False,
+    ) -> Replica:
+        rep = obj.replicas.get(region)
+        if rep is None:
+            rep = Replica(region, now, now, ttl, now + ttl, pinned)
+            obj.replicas[region] = rep
+        else:
+            rep.last_access, rep.ttl = now, ttl
+            rep.expire = now + ttl
+            rep.pinned = rep.pinned or pinned
+        rep.gen += 1
+        if not rep.pinned and np.isfinite(rep.expire):
+            heapq.heappush(self._heap, (rep.expire, oid, region, rep.gen))
+        return rep
+
+    def _drop_replica(self, oid: int, obj: ObjectState, region: str, now: float,
+                      count_eviction: bool = False) -> None:
+        rep = obj.replicas.pop(region, None)
+        if rep is None:
+            return
+        self._charge_storage(obj, rep, now)
+        if count_eviction:
+            self.report.n_evictions += 1
+
+    def _process_expirations(self, now: float) -> None:
+        while self._heap and self._heap[0][0] <= now:
+            t, oid, region, gen = heapq.heappop(self._heap)
+            obj = self.objects.get(oid)
+            if obj is None:
+                continue
+            rep = obj.replicas.get(region)
+            if rep is None or rep.gen != gen or rep.pinned or rep.expire > t:
+                continue
+            if self.mode == "FP" and len(obj.replicas) <= self.min_fp_copies:
+                # Never evict the sole copy (§3.2.1) -- re-arm and keep paying.
+                rep.expire = t + max(rep.ttl, 3600.0)
+                rep.gen += 1
+                heapq.heappush(self._heap, (rep.expire, oid, region, rep.gen))
+                continue
+            self._drop_replica(oid, obj, region, t, count_eviction=True)
+
+    # -- policy-visible state ------------------------------------------------------
+    def last_access_snapshot(self):
+        return self._open_last
+
+    def holders(self, obj: ObjectState) -> Dict[str, float]:
+        return {
+            r: (INF if rep.pinned else rep.expire)
+            for r, rep in obj.replicas.items()
+        }
+
+    # -- event handlers ------------------------------------------------------------
+    def _on_put(self, now: float, oid: int, size: float, region: str, bucket: str):
+        self.report.n_put += 1
+        self._charge_op(region, "PUT")
+        obj = self.objects.get(oid)
+        if obj is None:
+            obj = ObjectState(size, bucket, None, {})
+            self.objects[oid] = obj
+        else:
+            # New version: old copies become stale under LWW (§4.4).
+            for r in list(obj.replicas):
+                self._drop_replica(oid, obj, r, now)
+        obj.size, obj.version = size, obj.version + 1
+
+        if self.mode == "FB":
+            if obj.base_region is None:
+                obj.base_region = region           # §2.3: base = initial write location
+            self._add_replica(oid, obj, region, now, INF,
+                              pinned=(region == obj.base_region))
+            if region != obj.base_region:
+                # Sync replication to base keeps the pinned copy fresh (§4.4).
+                self._charge_transfer(region, obj.base_region, size)
+                self._charge_op(obj.base_region, "PUT")
+                self.report.n_replications += 1
+                self._add_replica(oid, obj, obj.base_region, now, INF, pinned=True)
+                # The write-local copy is a cache replica: give it a policy TTL.
+                ctx = GetContext(oid, bucket, region, obj.base_region, size, now,
+                                 hit=True, gap=None)
+                ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
+                if ttl <= 0:
+                    self._drop_replica(oid, obj, region, now)
+                else:
+                    self._add_replica(oid, obj, region, now, ttl)
+        else:
+            self._add_replica(oid, obj, region, now, INF, pinned=False)
+
+        for target in self.policy.replicate_on_write(oid, bucket, region, size, now):
+            if target == region or target in obj.replicas:
+                continue
+            self._charge_transfer(region, target, size)
+            self._charge_op(target, "PUT")
+            self.report.n_replications += 1
+            self._add_replica(oid, obj, target, now, INF)
+
+        if self.track_latency:
+            self.report.put_latency_ms.append(
+                self.cost.get_latency_ms(region, region, size) * 2.0
+            )
+
+    def _on_get(self, now: float, oid: int, region: str, bucket: str):
+        obj = self.objects.get(oid)
+        if obj is None or not obj.replicas:
+            return
+        self.report.n_get += 1
+        self._charge_op(region, "GET")
+        size = obj.size
+        hit = region in obj.replicas
+        src = region if hit else self.cost.cheapest_source(obj.replicas, region)
+        gap_key = (oid, region)
+        prev = self._last_get.get(gap_key)
+        gap = (now - prev) if prev is not None else None
+        ctx = GetContext(oid, bucket, region, src, size, now, hit, gap)
+        self.policy.observe_get(ctx)
+        self.report.n_hit += int(hit)
+        self.report.n_miss += int(not hit)
+
+        if not hit:
+            self._charge_transfer(src, region, size)
+            if self.policy.cache_on_read(ctx):
+                self.report.n_replications += 1
+                ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
+                if ttl > 0:
+                    self._add_replica(oid, obj, region, now, ttl)
+        else:
+            rep = obj.replicas[region]
+            if not rep.pinned:
+                ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
+                if ttl <= 0 and (self.mode != "FP" or len(obj.replicas) > self.min_fp_copies):
+                    self._drop_replica(oid, obj, region, now, count_eviction=True)
+                else:
+                    self._add_replica(oid, obj, region, now, ttl)
+            else:
+                rep.last_access = now
+
+        self._last_get[gap_key] = now
+        self._open_last.setdefault((bucket, region), {})[oid] = (now, size)
+        if self.track_latency:
+            self.report.get_latency_ms.append(self.cost.get_latency_ms(src, region, size))
+
+    def _on_delete(self, now: float, oid: int):
+        obj = self.objects.pop(oid, None)
+        if obj is None:
+            return
+        self._charge_op(next(iter(obj.replicas), "aws:us-east-1") if obj.replicas else
+                        (obj.base_region or self.cost.region_names()[0]), "DELETE")
+        for r in list(obj.replicas):
+            self._drop_replica(oid, obj, r, now)
+
+    # -- main loop -------------------------------------------------------------------
+    def run(self, trace) -> CostReport:
+        """``trace`` is a :class:`repro.core.traces.Trace`."""
+        ev = trace.events
+        regions, buckets = trace.regions, trace.buckets
+        self._horizon = float(ev["t"][-1]) if len(ev) else 0.0
+        self.policy.reset()
+        if self.policy.requires_oracle:
+            self.policy.oracle = build_oracle(trace)
+        span_epochs = None
+        if isinstance(self.policy, SPANStore):
+            span_epochs = build_epoch_summaries(trace, self.policy.epoch)
+
+        next_tick = self.scan_interval
+        epoch_idx = -1
+        for i in range(len(ev)):
+            t = float(ev["t"][i])
+            while next_tick <= t:
+                self._process_expirations(next_tick)
+                self.policy.periodic(next_tick, self)
+                next_tick += self.scan_interval
+            if span_epochs is not None:
+                e = int(t // self.policy.epoch)
+                if e != epoch_idx:
+                    epoch_idx = e
+                    gets, puts = span_epochs.get(e, ({}, {}))
+                    self.policy.solve_epoch(gets, puts)
+                    self._apply_spanstore_sets(t)
+            self._process_expirations(t)
+            op = int(ev["op"][i])
+            oid = int(ev["obj"][i])
+            region = regions[int(ev["region"][i])]
+            bucket = buckets[int(ev["bucket"][i])]
+            if op == OP_PUT:
+                self._on_put(t, oid, float(ev["size"][i]), region, bucket)
+            elif op == OP_GET:
+                self._on_get(t, oid, region, bucket)
+            else:
+                self._on_delete(t, oid)
+
+        self._process_expirations(self._horizon)
+        for oid, obj in self.objects.items():
+            for rep in obj.replicas.values():
+                self._charge_storage(obj, rep, min(rep.expire, self._horizon))
+        return self.report
+
+    def _apply_spanstore_sets(self, now: float) -> None:
+        """Epoch boundary: drop replicas outside the new solver sets (FP, >=1)."""
+        for oid, obj in self.objects.items():
+            rs = self.policy.replica_sets.get(obj.bucket)
+            if not rs:
+                continue
+            keep = set(rs)
+            for r in list(obj.replicas):
+                if r not in keep and len(obj.replicas) > self.min_fp_copies:
+                    self._drop_replica(oid, obj, r, now, count_eviction=True)
+
+
+# ---------------------------------------------------------------------------
+# Oracle construction
+# ---------------------------------------------------------------------------
+
+def build_oracle(trace) -> Oracle:
+    ev = trace.events
+    mask = ev["op"] == OP_GET
+    objs = ev["obj"][mask]
+    regs = ev["region"][mask]
+    ts = ev["t"][mask]
+    table: Dict[Tuple[int, str], np.ndarray] = {}
+    order = np.lexsort((ts, regs, objs))
+    objs, regs, ts = objs[order], regs[order], ts[order]
+    if len(objs):
+        bounds = np.nonzero(np.diff(objs) | np.diff(regs))[0] + 1
+        starts = np.concatenate([[0], bounds])
+        ends = np.concatenate([bounds, [len(objs)]])
+        for s, e in zip(starts, ends):
+            table[(int(objs[s]), trace.regions[int(regs[s])])] = ts[s:e]
+    return Oracle(table)
+
+
+def build_epoch_summaries(trace, epoch: float):
+    """{epoch_idx: ({bucket: {region: get_bytes}}, {bucket: {region: put_bytes}})}
+    for the SPANStore oracle solver -- the *upcoming* epoch's workload."""
+    ev = trace.events
+    out: Dict[int, Tuple[dict, dict]] = {}
+    eidx = (ev["t"] // epoch).astype(np.int64)
+    for i in range(len(ev)):
+        e = int(eidx[i])
+        gets, puts = out.setdefault(e, ({}, {}))
+        bucket = trace.buckets[int(ev["bucket"][i])]
+        region = trace.regions[int(ev["region"][i])]
+        d = gets if int(ev["op"][i]) == OP_GET else puts
+        d.setdefault(bucket, {}).setdefault(region, 0.0)
+        d[bucket][region] += float(ev["size"][i])
+    return out
+
+
+def run_policy(trace, cost: CostModel, policy_name: str, mode: str = "FB",
+               track_latency: bool = False, **policy_kw) -> CostReport:
+    from .policies import make_policy
+
+    policy = make_policy(policy_name, cost, **policy_kw)
+    sim = Simulator(cost, policy, mode=mode, track_latency=track_latency)
+    return sim.run(trace)

@@ -1,0 +1,249 @@
+"""Adaptive TTL selection (paper §3.2.2-§3.3): ExpectedCost(TTL) and its argmin.
+
+Given one (bucket, target-region) histogram pair (``hist``, ``last``) and an
+edge's prices (S = storage $/GB/month at the target, N = egress $/GB on the
+edge), the expected cost of running a TTL-with-reset eviction policy is the
+four-term functional of §3.2.2:
+
+    ExpectedCost(TTL) =   first_read_remote_bytes * N                 (initial GETs)
+                        + sum_{j: t(j) <= TTL} hist(j) * t_hat(j) * S (hits)
+                        + sum_{j: t(j) >  TTL} hist(j) * (N + TTL*S)  (misses)
+                        + sum_{j: t(j) >  TTL} last(j) * TTL * S      (tail storage)
+                        [+ sum_{j: t(j) <= TTL} last(j) * age(j) * S  (censored)]
+
+    ``last(j)`` is a census of bytes currently paused (no re-read yet), bucketed
+    by pause age.  Bytes paused beyond TTL have, under this TTL, already been
+    evicted after paying TTL*S -- the paper's term.  Bytes paused *less* than
+    TTL are censored: they may still be re-read (and would then show up in
+    ``hist``), but they are certainly being stored right now, so we charge them
+    their observed age (the bracketed correction, on by default).  Without it,
+    any TTL beyond the observation window zeroes the tail term and the argmin
+    runs away to "never evict"; with it the curve converges to the observed
+    always-store cost -- see tests/test_ttl_policy.py.
+
+We evaluate it for every candidate TTL (the cell boundaries, plus TTL=0 ==
+AlwaysEvict and TTL=inf == AlwaysStore-like) in O(cells) total using
+prefix/suffix sums, and return the argmin.  The same computation, batched over
+every (bucket x directed-edge) pair of the deployment, is the policy-plane hot
+spot that :mod:`repro.kernels.ttl_scan` implements as a Pallas TPU kernel; the
+numpy path here doubles as its oracle.
+
+The latency extension of §3.3.2 (``U_perf-val`` $/byte willingness to pay per
+extra cache hit) is :func:`choose_ttl_with_perf_value`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .costmodel import GB, SECONDS_PER_MONTH, CostModel
+from .histogram import AccessHistogram, RollingHistogram, cell_edges
+
+
+def _per_byte_prices(storage_gb_month: float, egress_gb: float) -> Tuple[float, float]:
+    """Convert catalog prices to ($ per byte-second, $ per byte)."""
+    s = storage_gb_month / GB / SECONDS_PER_MONTH
+    n = egress_gb / GB
+    return s, n
+
+
+def expected_cost_curve(
+    h: AccessHistogram,
+    storage_gb_month: float,
+    egress_gb: float,
+    include_censored_tail: bool = True,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """ExpectedCost for every candidate TTL.
+
+    Returns ``(candidate_ttls_seconds, cost_dollars)`` where candidates are
+    ``[0, t(0), t(1), ..., t(J-1)]`` (TTL=0 prepended -- evict immediately).
+    O(cells) total via prefix/suffix sums; mirrored by the Pallas kernel in
+    :mod:`repro.kernels.ttl_scan`.
+    """
+    s, n = _per_byte_prices(storage_gb_month, egress_gb)
+    edges, hist, t_hat, last = h.as_arrays()
+
+    hit_cost_csum = np.concatenate([[0.0], np.cumsum(hist * t_hat)]) * s
+    hist_csum = np.concatenate([[0.0], np.cumsum(hist)])
+    last_csum = np.concatenate([[0.0], np.cumsum(last)])
+    total_hist, total_last = hist_csum[-1], last_csum[-1]
+
+    ttls = np.concatenate([[0.0], edges])                  # candidate k keeps cells < k
+    miss_bytes = total_hist - hist_csum                    # bytes with t(j) > TTL_k
+    tail_bytes = total_last - last_csum                    # paused longer than TTL_k
+
+    cost = (
+        h.first_read_remote_bytes * n
+        + hit_cost_csum
+        + miss_bytes * (n + ttls * s)
+        + tail_bytes * ttls * s
+    )
+    if include_censored_tail:
+        # Censored pauses (age <= TTL) are being stored right now: charge the
+        # observed age (cell midpoint -- cells are <=2% wide by construction).
+        lower = np.concatenate([[0.0], edges[:-1]])
+        mid = 0.5 * (lower + edges)
+        age_cost_csum = np.concatenate([[0.0], np.cumsum(last * mid)]) * s
+        cost = cost + age_cost_csum
+    return ttls, cost
+
+
+def choose_ttl(
+    h: AccessHistogram,
+    storage_gb_month: float,
+    egress_gb: float,
+    **kw,
+) -> float:
+    """argmin_TTL ExpectedCost(TTL), in seconds."""
+    ttls, cost = expected_cost_curve(h, storage_gb_month, egress_gb, **kw)
+    return float(ttls[int(np.argmin(cost))])
+
+
+def choose_ttl_with_perf_value(
+    h: AccessHistogram,
+    storage_gb_month: float,
+    egress_gb: float,
+    u_perf_val_per_gb: float,
+    **kw,
+) -> float:
+    """§3.3.2: lift the TTL above the cost argmin while the *average* extra cost
+    per extra locally-hit byte stays below the user performance value.
+
+    Picks the highest TTL with
+        (cost(TTL) - cost(TTL*)) / extra_hit_bytes(TTL*, TTL] <= U_perf-val.
+    """
+    ttls, cost = expected_cost_curve(h, storage_gb_month, egress_gb, **kw)
+    k_star = int(np.argmin(cost))
+    if u_perf_val_per_gb <= 0:
+        return float(ttls[k_star])
+    u = u_perf_val_per_gb / GB
+    _, hist, _, _ = h.as_arrays()
+    hist_csum = np.concatenate([[0.0], np.cumsum(hist)])
+    extra_hits = hist_csum - hist_csum[k_star]             # bytes turned into hits
+    with np.errstate(invalid="ignore", divide="ignore"):
+        rate = (cost - cost[k_star]) / np.maximum(extra_hits, 1e-30)
+    ok = np.arange(ttls.shape[0]) >= k_star
+    ok &= (extra_hits > 0) | (np.arange(ttls.shape[0]) == k_star)
+    ok &= (rate <= u) | (np.arange(ttls.shape[0]) == k_star)
+    return float(ttls[np.nonzero(ok)[0].max()])
+
+
+@dataclasses.dataclass
+class EdgeTTL:
+    """Chosen TTL for one directed edge of the region graph (Fig. 2)."""
+
+    ttl_seconds: float
+    chosen_at: float
+    expected_cost: float = np.nan
+
+
+class AdaptiveTTLController:
+    """Per-(bucket, target region) statistics -> per-edge TTLs (§3.3.1).
+
+    The histogram is collected at the *target* region per bucket (bucket-level
+    granularity -- §3.2.3: object-level statistics are misleading under bursts);
+    each incoming edge gets its own TTL because only N differs per edge.  The
+    object-level TTL is then ``min`` over edges whose source currently holds a
+    replica, with the eviction-safety filter applied by the placement layer.
+    """
+
+    def __init__(
+        self,
+        cost: CostModel,
+        refresh_period: float = 24 * 3600.0,
+        warmup_min_samples: int = 32,
+        u_perf_val_per_gb: float = 0.0,
+        edges: Optional[np.ndarray] = None,
+        rotate_multiple_of_t_even: float = 2.0,
+    ) -> None:
+        self.cost = cost
+        self.refresh_period = refresh_period
+        self.warmup_min_samples = warmup_min_samples
+        self.u_perf_val_per_gb = u_perf_val_per_gb
+        self._cell_edges = cell_edges() if edges is None else edges
+        self.hists: Dict[Tuple[str, str], RollingHistogram] = {}
+        self.edge_ttls: Dict[Tuple[str, str, str], EdgeTTL] = {}
+        self.last_refresh: Dict[Tuple[str, str], float] = {}
+        self.rotate_multiple = rotate_multiple_of_t_even
+
+    # -- statistics ingestion ------------------------------------------------
+    def hist_for(self, bucket: str, region: str) -> RollingHistogram:
+        key = (bucket, region)
+        if key not in self.hists:
+            self.hists[key] = RollingHistogram(self._cell_edges)
+        return self.hists[key]
+
+    def record_gap(self, bucket: str, region: str, dt: float, size: float) -> None:
+        self.hist_for(bucket, region).current.add_gaps(
+            np.asarray([dt]), np.asarray([size])
+        )
+
+    def record_first_read(self, bucket: str, region: str, size: float, remote: bool) -> None:
+        self.hist_for(bucket, region).current.add_first_read(size, remote)
+
+    def set_last_snapshot(
+        self, bucket: str, region: str, ages: np.ndarray, sizes: np.ndarray
+    ) -> None:
+        h = self.hist_for(bucket, region).current
+        h.last[:] = 0.0
+        if len(ages):
+            h.add_last(ages, sizes)
+
+    # -- TTL queries ----------------------------------------------------------
+    def edge_ttl(self, bucket: str, src: str, dst: str, now: float) -> float:
+        """TTL for the (src -> dst) edge; T_even warmup before enough samples."""
+        self._maybe_refresh(bucket, dst, now)
+        e = self.edge_ttls.get((bucket, src, dst))
+        if e is None:
+            return self.cost.t_even_seconds(src, dst)
+        return e.ttl_seconds
+
+    def object_ttl(
+        self, bucket: str, dst: str, holder_regions, now: float
+    ) -> float:
+        """min over edges from replica-holding regions (§3.3.1)."""
+        ttls = [
+            self.edge_ttl(bucket, src, dst, now)
+            for src in holder_regions
+            if src != dst
+        ]
+        if not ttls:
+            return self.cost.t_even_seconds(dst, dst) if False else np.inf
+        return float(min(ttls))
+
+    # -- refresh loop ----------------------------------------------------------
+    def _maybe_refresh(self, bucket: str, dst: str, now: float) -> None:
+        key = (bucket, dst)
+        last = self.last_refresh.get(key, -np.inf)
+        if now - last < self.refresh_period:
+            return
+        self.last_refresh[key] = now
+        roll = self.hist_for(bucket, dst)
+        merged = roll.merged()
+        if merged.n_samples < self.warmup_min_samples:
+            return
+        s = self.cost.storage_price(dst)
+        for src in self.cost.region_names():
+            if src == dst:
+                continue
+            n = self.cost.egress_price(src, dst)
+            if self.u_perf_val_per_gb > 0:
+                ttl = choose_ttl_with_perf_value(merged, s, n, self.u_perf_val_per_gb)
+            else:
+                ttl = choose_ttl(merged, s, n)
+            ttls_c, cost_c = expected_cost_curve(merged, s, n)
+            self.edge_ttls[(bucket, src, dst)] = EdgeTTL(
+                ttl, now, float(cost_c.min())
+            )
+        # Rotate the collection window once it is comfortably longer than the
+        # largest T_even of any incoming edge (§3.2.3 guidance).
+        t_even_max = max(
+            self.cost.t_even_seconds(src, dst)
+            for src in self.cost.region_names()
+            if src != dst
+        )
+        if now - roll.window_start > self.rotate_multiple * t_even_max:
+            roll.rotate(now)

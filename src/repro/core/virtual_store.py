@@ -1,0 +1,190 @@
+"""The client-facing virtual object store (paper §4.1 + §4.3).
+
+:class:`VirtualStore` plays the role of the S3-Proxy: it exposes virtual
+buckets/objects that "appear global to the user", consults the metadata server
+for routing, moves the actual bytes between physical backends, and implements
+the paper's placement policy mechanics:
+
+  * PUT  -> write-local + 2PC commit (§2.3, §4.5);
+  * GET  -> cheapest committed replica; on a remote read, replicate-on-read
+    with the adaptive TTL (§2.3, §3);
+  * DELETE / HEAD / LIST / COPY / multipart upload -- the 14-op S3 surface the
+    paper supports, minus auth plumbing.
+
+This is the layer the training framework mounts: checkpoints and data shards
+are virtual objects, so multi-region fault tolerance falls out of the paper's
+own machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .backends import Backend, HeadResult
+from .costmodel import CostModel
+from .metadata import COMMITTED, MetadataServer
+
+
+@dataclasses.dataclass
+class TransferLog:
+    """Egress accounting for real (non-simulated) usage."""
+
+    bytes_moved: Dict[Tuple[str, str], int] = dataclasses.field(default_factory=dict)
+    dollars: float = 0.0
+
+    def add(self, cost: CostModel, src: str, dst: str, nbytes: int) -> None:
+        if src == dst:
+            return
+        self.bytes_moved[(src, dst)] = self.bytes_moved.get((src, dst), 0) + nbytes
+        self.dollars += cost.transfer_cost(src, dst, nbytes)
+
+
+class VirtualStore:
+    def __init__(
+        self,
+        cost: CostModel,
+        backends: Dict[str, Backend],
+        meta: Optional[MetadataServer] = None,
+        mode: str = "FB",
+        clock=None,
+    ) -> None:
+        missing = set(cost.region_names()) - set(backends)
+        if missing:
+            raise ValueError(f"backends missing for regions {sorted(missing)}")
+        self.cost = cost
+        self.backends = backends
+        self.meta = meta or MetadataServer(cost, mode=mode)
+        self.transfers = TransferLog()
+        self._clock = clock or time.time
+        self._mpu: Dict[str, Dict[int, bytes]] = {}
+
+    # -- bucket ops -----------------------------------------------------------
+    def create_bucket(self, bucket: str) -> None:
+        self.meta.create_bucket(bucket)
+
+    def list_buckets(self) -> List[str]:
+        return self.meta.list_buckets()
+
+    def delete_bucket(self, bucket: str) -> None:
+        self.meta.delete_bucket(bucket)
+
+    # -- object ops --------------------------------------------------------------
+    def put_object(self, bucket: str, key: str, data: bytes, region: str) -> int:
+        """Write-local PUT with the two-phase commit of §4.5."""
+        now = self._clock()
+        version = self.meta.begin_upload(bucket, key, region, len(data), now)
+        h = self.backends[region].put(bucket, self._pkey(key, version), data)
+        self.meta.complete_upload(bucket, key, region, version, len(data),
+                                  h.etag, now)
+        return version
+
+    def get_object(self, bucket: str, key: str, region: str,
+                   version: Optional[int] = None) -> bytes:
+        """Cheapest-source GET + replicate-on-read (§2.3).
+
+        Read-repair (§4.5): if the chosen replica's physical bytes are gone
+        (region outage), the stale replica is dropped from metadata and the
+        read retries against the surviving copies."""
+        now = self._clock()
+        for _attempt in range(len(self.backends) + 1):
+            vm, src, hit = self.meta.locate(bucket, key, region, now, version)
+            try:
+                data = self.backends[src].get(bucket, self._pkey(key, vm.version))
+                break
+            except KeyError:
+                vm.replicas.pop(src, None)       # physical bytes lost
+                if not vm.replicas:
+                    raise
+        self.meta.record_get(bucket, key, region, vm.size, hit, now)
+        if hit:
+            self.meta.touch_replica(bucket, key, region, now)
+        else:
+            self.transfers.add(self.cost, src, region, len(data))
+            h = self.backends[region].put(bucket, self._pkey(key, vm.version), data)
+            self.meta.commit_replica(bucket, key, region, vm.size, h.etag, now)
+        return data
+
+    def head_object(self, bucket: str, key: str) -> HeadResult:
+        om = self.meta.head_object(bucket, key)
+        vm = om.latest
+        return HeadResult(key, vm.size, vm.etag, vm.last_modified)
+
+    def list_objects(self, bucket: str, prefix: str = "") -> List[str]:
+        return [om.key for om in self.meta.list_objects(bucket, prefix)]
+
+    def delete_object(self, bucket: str, key: str) -> None:
+        for region, version in self.meta.delete_object(bucket, key):
+            self.backends[region].delete(bucket, self._pkey(key, version))
+
+    def delete_objects(self, bucket: str, keys: Iterable[str]) -> None:
+        for k in keys:
+            self.delete_object(bucket, k)
+
+    def copy_object(self, bucket: str, src_key: str, dst_key: str, region: str) -> int:
+        data = self.get_object(bucket, src_key, region)
+        return self.put_object(bucket, dst_key, data, region)
+
+    # -- multipart upload -----------------------------------------------------------
+    def create_multipart_upload(self, bucket: str, key: str, region: str) -> str:
+        uid = hashlib.md5(f"{bucket}/{key}/{region}/{self._clock()}".encode()).hexdigest()
+        self._mpu[uid] = {}
+        return uid
+
+    def upload_part(self, upload_id: str, part_number: int, data: bytes) -> str:
+        self._mpu[upload_id][part_number] = bytes(data)
+        return hashlib.md5(data).hexdigest()
+
+    def complete_multipart_upload(self, bucket: str, key: str, region: str,
+                                  upload_id: str) -> int:
+        parts = self._mpu.pop(upload_id)
+        blob = b"".join(parts[i] for i in sorted(parts))
+        return self.put_object(bucket, key, blob, region)
+
+    def abort_multipart_upload(self, upload_id: str) -> None:
+        self._mpu.pop(upload_id, None)
+
+    # -- maintenance ---------------------------------------------------------------
+    def run_eviction_scan(self, now: Optional[float] = None) -> int:
+        """The §4.2 background process: metadata scan + physical DELETEs."""
+        now = self._clock() if now is None else now
+        victims = self.meta.scan_expired(now)
+        for bucket, key, region, version in victims:
+            self.backends[region].delete(bucket, self._pkey(key, version))
+        self.meta.expire_pending(now)
+        return len(victims)
+
+    def backup_metadata(self, bucket: str, region: str) -> None:
+        """Checkpoint the control plane *into* the object layer (§4.5)."""
+        blob = self.meta.backup()
+        self.backends[region].put(bucket, "__skystore_meta__/backup.json", blob)
+
+    @classmethod
+    def recover(
+        cls, cost: CostModel, backends: Dict[str, Backend], bucket: str,
+        region: str, mode: str = "FB",
+    ) -> "VirtualStore":
+        """Bring up a fresh metadata server from the latest backup, then
+        reconcile against the physical stores (§4.5 failure recovery)."""
+        try:
+            blob = backends[region].get(bucket, "__skystore_meta__/backup.json")
+            meta = MetadataServer.restore(blob, cost, mode=mode)
+        except KeyError:
+            meta = MetadataServer(cost, mode=mode)
+            meta.create_bucket(bucket)
+        vs = cls(cost, backends, meta, mode=mode)
+        meta.reconcile(backends)
+        return vs
+
+    # -- internals --------------------------------------------------------------------
+    @staticmethod
+    def _pkey(key: str, version: int) -> str:
+        return f"{key}@v{version}"
+
+    def replica_regions(self, bucket: str, key: str) -> List[str]:
+        om = self.meta.head_object(bucket, key)
+        return sorted(
+            r for r, m in om.latest.replicas.items() if m.status == COMMITTED
+        )

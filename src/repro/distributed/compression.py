@@ -1,0 +1,61 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+trick; DESIGN.md §6).
+
+Intra-pod reductions ride the 50 GB/s ICI links; the *pod* axis crosses DCN,
+which is an order of magnitude thinner -- so the cross-pod contribution to the
+collective roofline term is the one worth compressing.  We implement int8
+block quantization (per-tensor scale from the fp32 absmax) as a
+quantize -> (all-reduce over "pod") -> dequantize sandwich.  Inside an SPMD
+program the all-reduce is implicit in the sharding; the quantize/dequantize
+pair bounds the bytes the partitioner must move across the pod axis, and the
+compression error is modeled exactly (the train step sees the dequantized
+gradients, so convergence effects are visible in tests, not hidden).
+
+Error feedback (residual accumulation) is provided for trainers that iterate:
+the quantization residual is carried into the next step, the standard trick
+that restores convergence under aggressive compression.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _absmax_scale(g: jax.Array) -> jax.Array:
+    return jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+
+
+def compress_grads_int8(grads: Any) -> Tuple[Any, Any]:
+    """pytree of fp grads -> (int8 pytree, fp32 scale pytree)."""
+    scales = jax.tree.map(lambda g: _absmax_scale(g.astype(jnp.float32)), grads)
+    q = jax.tree.map(
+        lambda g, s: jnp.clip(
+            jnp.round(g.astype(jnp.float32) / s), -127, 127
+        ).astype(jnp.int8),
+        grads, scales,
+    )
+    return q, scales
+
+
+def decompress_grads_int8(q: Any, scales: Any) -> Any:
+    return jax.tree.map(
+        lambda qi, s: qi.astype(jnp.float32) * s, q, scales)
+
+
+def compress_with_error_feedback(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """(grads + residual) -> (dequantized grads, new residual)."""
+    if residual is not None:
+        grads = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    q, s = compress_grads_int8(grads)
+    deq = decompress_grads_int8(q, s)
+    new_residual = jax.tree.map(lambda g, d: g.astype(jnp.float32) - d,
+                                grads, deq)
+    return deq, new_residual
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

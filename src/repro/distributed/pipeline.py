@@ -1,0 +1,143 @@
+"""Pipeline parallelism (GPipe schedule) as a composable distribution layer.
+
+For uniform-pattern architectures (one repeated LayerSpec -- llama, coder,
+nemotron, hubert, qwen2-vl), the stacked per-repeat parameters [R, ...]
+shard along the layer axis over a ``stage`` mesh axis; activations move
+stage-to-stage with ``jax.lax.ppermute`` inside a ``shard_map``.
+
+The schedule is written as the *forward* pipeline only -- a ``lax.scan`` over
+T = M + S - 1 ticks, each tick being (compute local layer slice, permute the
+boundary activation to the next stage).  Because ``ppermute`` and ``scan``
+are differentiable, ``jax.grad`` of the pipelined loss IS the reverse
+pipeline (activations stashed per tick = the GPipe memory bill; combine with
+microbatch counts to trade bubbles for memory).
+
+Scope note (DESIGN.md §6): at the assigned 256/512-chip meshes every cell
+already fits with FSDP x TP, so PP is shipped as an *alternative* strategy
+with its own correctness proof (tests/test_pipeline.py: pipelined forward ==
+sequential forward bit-for-bit on a reduced config, and gradients flow) and
+a 4-stage lowering demo, rather than wired into the 40-cell sweep.  At
+>10k-chip scale, stages would take over the `pod` axis (cross-DCN boundary
+traffic = one activation tensor per tick -- far below the FSDP gather
+volume, which is why PP is the standard cross-pod choice).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models import transformer as T
+from repro.models import layers as L
+
+
+def _uniform_spec(cfg):
+    assert not cfg.prefix and len(cfg.pattern) == 1, (
+        "pipeline stages require a uniform layer pattern")
+    return cfg.pattern[0]
+
+
+def stage_param_sharding(mesh: Mesh, params: Any) -> Any:
+    """Block params [R, ...] along the leading (layer) axis over 'stage';
+    embeddings/head replicate across stages (they live on first/last)."""
+    def spec_for(path, x):
+        top = path[0].key
+        if top == "blocks":
+            return NamedSharding(mesh, P("stage"))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def make_pipelined_forward(cfg, mesh: Mesh, n_stages: int, microbatches: int):
+    """Returns fn(params, tokens [M*B, S]) -> logits [M*B, S, vocab], running
+    the decoder blocks as an S-stage GPipe over the 'stage' mesh axis."""
+    spec = _uniform_spec(cfg)
+    r = cfg.pattern_repeats()
+    assert r % n_stages == 0, (r, n_stages)
+    m = microbatches
+    assert m >= n_stages, "GPipe wants M >= S to bound the bubble"
+
+    def blocks_fn(block_params, x):
+        """Run this stage's layer slice [R/S, ...] sequentially."""
+        def body(carry, p_slice):
+            y, _, _ = T._apply_block(cfg, spec, p_slice, carry, None,
+                                     "train", None, None)
+            return y, None
+        out, _ = jax.lax.scan(body, x, block_params)
+        return out
+
+    def pipelined(params, x_emb):
+        """Inside shard_map: x_emb [M, B, S, D] replicated; params['blocks']
+        holds THIS stage's slice."""
+        stage = jax.lax.axis_index("stage")
+        block_params = params["blocks"]["pos0"]
+        mb, b, s, d = x_emb.shape
+        buf = jnp.zeros((b, s, d), x_emb.dtype)
+        out0 = jnp.zeros((b, s, d), x_emb.dtype)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if still in range)
+            feed = jnp.where(t < mb, t, mb - 1)
+            incoming = jnp.where((stage == 0) & (t < mb), x_emb[feed], buf)
+            y = blocks_fn(block_params, incoming)
+            # last stage emits finished microbatch t - (S-1)
+            emit_idx = t - (n_stages - 1)
+            outs = jax.lax.cond(
+                (stage == n_stages - 1) & (emit_idx >= 0),
+                lambda o: jax.lax.dynamic_update_slice(
+                    o, y[None], (emit_idx, 0, 0, 0)),
+                lambda o: o, outs)
+            # rotate boundary activations to the next stage
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            buf = jax.lax.ppermute(y, "stage", perm)
+            return (buf, outs), None
+
+        outs = jnp.zeros((mb, b, s, d), x_emb.dtype)
+        (buf, outs), _ = jax.lax.scan(
+            tick, (buf, outs), jnp.arange(mb + n_stages - 1))
+        # every stage needs the last stage's outputs (ppermute is a strict
+        # permutation, so broadcast via all_gather + index)
+        gathered = jax.lax.all_gather(outs, "stage")      # [S, M, B, s, d]
+        return gathered[n_stages - 1]
+
+    p_specs = jax.tree_util.tree_map_with_path(
+        lambda path, _x: (P("stage") if path[0].key == "blocks" else P()),
+        jax.eval_shape(functools.partial(T.init_params, cfg=cfg),
+                       jax.random.PRNGKey(0)))
+
+    smapped = shard_map(
+        pipelined, mesh=mesh,
+        in_specs=(p_specs, P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+    def fn(params, tokens):
+        adt = jnp.dtype(cfg.act_dtype)
+        x = params["embed"]["w"].astype(adt)[tokens]
+        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)
+        tb = tokens.shape[0]
+        assert tb % m == 0
+        x_mb = x.reshape(m, tb // m, tokens.shape[1], cfg.d_model)
+        h = smapped(params, x_mb)
+        h = h.reshape(tb, tokens.shape[1], cfg.d_model)
+        h = L.apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+        return T._lm_head(cfg, params, h)
+
+    return fn
+
+
+def pipeline_loss_fn(cfg, mesh, n_stages, microbatches):
+    fwd = make_pipelined_forward(cfg, mesh, n_stages, microbatches)
+
+    def loss(params, batch):
+        logits = fwd(params, batch["inputs"])
+        return T.cross_entropy(logits, batch["labels"])
+
+    return loss

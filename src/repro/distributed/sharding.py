@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules (MaxText-style) for DP/FSDP/TP/EP/SP.
+
+Models annotate arrays with *logical* axis names ("batch", "d_model", "heads",
+"experts", ...).  A :class:`ShardingRules` table maps logical names to mesh
+axes; the same model code then runs under any mesh/parallelism combination by
+swapping rule tables -- this is what makes the 40-cell dry-run a config sweep
+instead of ten hand-sharded models.
+
+Default production rules (16 x 16 "data" x "model" mesh, optionally with a
+leading "pod" axis):
+
+  batch         -> ("pod", "data")     # DP across pods and the data axis
+  fsdp          -> "data"              # parameter/optimizer FSDP dim
+  heads/d_ff/   -> "model"             # tensor parallelism
+  vocab/experts
+  seq           -> None                # (sequence parallelism: set to "data"
+                                       #  for long-context decode, batch=1)
+
+``long_context_rules`` flips batch/seq so a 500k-token cache shards over the
+data axis (SP) while batch=1 replicates.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]
+_THREAD = threading.local()
+
+
+class ShardingRules(dict):
+    """logical axis name -> mesh axis (str | tuple | None)."""
+
+    def spec(self, logical: Sequence[Optional[str]]) -> P:
+        parts = []
+        used = set()
+        for name in logical:
+            if name is None:
+                parts.append(None)
+                continue
+            mesh_axes = self.get(name)
+            if mesh_axes is None:
+                parts.append(None)
+                continue
+            if isinstance(mesh_axes, str):
+                mesh_axes = (mesh_axes,)
+            # A mesh axis may appear at most once in a PartitionSpec.
+            mesh_axes = tuple(a for a in mesh_axes if a not in used)
+            used.update(mesh_axes)
+            parts.append(mesh_axes if len(mesh_axes) > 1 else
+                         (mesh_axes[0] if mesh_axes else None))
+        return P(*parts)
+
+
+def base_rules(multi_pod: bool = False) -> ShardingRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(
+        batch=dp,
+        seq=None,
+        kv_seq=None,
+        d_model=None,
+        heads="model",
+        kv_heads="model",
+        head_dim=None,
+        d_ff="model",
+        vocab="model",
+        experts=None,
+        expert_ff="model",
+        fsdp="data",
+        kv_lora=None,
+        conv=None,
+        state=None,
+        layers=None,
+        frames=None,
+        attn_q=None,        # q-sequence axis of attention score tiles: set to
+                            # "model" for archs whose head counts cannot shard
+    )
+
+
+def long_context_rules(multi_pod: bool = False) -> ShardingRules:
+    """Sequence parallelism for batch=1, 500k-token decode: the KV cache
+    shards over BOTH mesh axes along the sequence dim (524288 / 512 = 1024
+    per chip); batch=1 stays replicated."""
+    r = base_rules(multi_pod)
+    r["batch"] = None
+    r["seq"] = "data"
+    r["kv_seq"] = (("pod", "data", "model") if multi_pod
+                   else ("data", "model"))
+    return r
+
+
+# -- thread-local current rules ------------------------------------------------
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules, mesh: Optional[Mesh] = None):
+    prev = getattr(_THREAD, "rules", None)
+    prev_mesh = getattr(_THREAD, "mesh", None)
+    _THREAD.rules = rules
+    _THREAD.mesh = mesh
+    try:
+        yield rules
+    finally:
+        _THREAD.rules = prev
+        _THREAD.mesh = prev_mesh
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_THREAD, "rules", None)
+
+
+def _fit_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop mesh axes that do not evenly divide their dimension (e.g. 8 KV
+    heads over a 16-way model axis): the entry degrades to replicated rather
+    than erroring, so one rule table serves every architecture."""
+    parts = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            parts.append(entry)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        parts.append(entry if shape[i] % n == 0 else None)
+    return P(*parts)
+
+
+def shard(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op outside a mesh/rules
+    context, so models run unmodified on a single CPU device)."""
+    rules = current_rules()
+    mesh = _current_mesh()
+    if rules is None or mesh is None or mesh.empty:
+        return x
+    spec = _fit_spec(mesh, rules.spec(logical), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    mesh = getattr(_THREAD, "mesh", None)      # set by use_rules(rules, mesh)
+    if mesh is not None:
+        return mesh
+    # fall back to the ambient `with mesh:` context (deprecated accessor kept
+    # for callers that don't thread the mesh through use_rules)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return jax.interpreters.pxla.thread_resources.env.physical_mesh
+
+
+def logical_sharding(mesh: Mesh, rules: ShardingRules, axes_tree, struct_tree):
+    """Map pytrees of (logical-axes tuples, ShapeDtypeStructs) to
+    NamedShardings for jit in_shardings/out_shardings -- divisibility-aware."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    return jax.tree.map(
+        lambda axes, st: NamedSharding(
+            mesh, _fit_spec(mesh, rules.spec(axes), st.shape)),
+        axes_tree, struct_tree, is_leaf=is_axes,
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,132 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Each op accepts natural shapes/dtypes, handles padding + layout, calls the
+kernel (``interpret=True`` on CPU so the whole framework runs end-to-end off-
+TPU), and exposes the pure-jnp oracle fallback via ``use_kernel=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .flash_attention import flash_attention_bhsd
+from .ttl_scan import ttl_cost_surface
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# TTL expected-cost scan
+# ---------------------------------------------------------------------------
+
+def ttl_scan(
+    hist, time_w, last, edges, s_price, n_price, first_remote,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+):
+    """Batched TTL selection over E directed edges.
+
+    Returns ``(best_ttl [E], best_cost [E], cost_surface [E, C+1])`` where
+    candidate 0 is TTL=0 (evict immediately) and candidate j+1 is
+    TTL=edges[j].  All inputs may be numpy or jax arrays.
+    """
+    hist, time_w, last = (jnp.asarray(x, jnp.float32) for x in (hist, time_w, last))
+    edges = jnp.asarray(edges, jnp.float32)
+    s_price = jnp.asarray(s_price, jnp.float32)
+    n_price = jnp.asarray(n_price, jnp.float32)
+    first_remote = jnp.asarray(first_remote, jnp.float32)
+
+    if use_kernel:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        surface = ttl_cost_surface(
+            hist, time_w, last, edges, s_price, n_price, first_remote,
+            interpret=interp,
+        )
+    else:
+        surface = ref.ttl_cost_ref(
+            hist, time_w, last, edges, s_price, n_price, first_remote
+        )
+
+    # Candidate TTL=0: every re-read pays N; no storage at all.
+    zero = (first_remote + hist.sum(axis=1)) * n_price
+    full = jnp.concatenate([zero[:, None], surface], axis=1)
+    idx = jnp.argmin(full, axis=1)
+    ttls = jnp.concatenate([jnp.zeros_like(edges[:1]), edges])
+    return ttls[idx], jnp.take_along_axis(full, idx[:, None], 1)[:, 0], full
+
+
+def ttl_scan_from_histograms(histograms, cost_model, targets, use_kernel=True):
+    """Convenience: run the batched scan for a list of (bucket, src, dst)
+    problems built from :class:`repro.core.histogram.AccessHistogram` objects.
+
+    ``histograms`` -- list of AccessHistogram (one per problem, target-side);
+    ``targets``    -- list of (src_region, dst_region) edges aligned with it.
+    """
+    from repro.core.costmodel import GB, SECONDS_PER_MONTH
+
+    edges = histograms[0].edges
+    hist = np.stack([h.hist for h in histograms])
+    time_w = np.stack([h.time_weight for h in histograms])
+    last = np.stack([h.last for h in histograms])
+    first = np.asarray([h.first_read_remote_bytes for h in histograms])
+    s = np.asarray([
+        cost_model.storage_price(dst) / GB / SECONDS_PER_MONTH
+        for (_src, dst) in targets
+    ])
+    n = np.asarray([
+        cost_model.egress_price(src, dst) / GB for (src, dst) in targets
+    ])
+    return ttl_scan(hist, time_w, last, edges, s, n, first, use_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,            # [B, Hq, Sq, D]
+    k: jax.Array,            # [B, Hkv, Skv, D]
+    v: jax.Array,            # [B, Hkv, Skv, D]
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """GQA-aware fused attention: repeats kv heads to q heads, folds (B, H)
+    into the kernel batch, unpads on the way out."""
+    if not use_kernel:
+        b, hq, sq, d = q.shape
+        hkv = k.shape[1]
+        k_ = jnp.repeat(k, hq // hkv, axis=1)
+        v_ = jnp.repeat(v, hq // hkv, axis=1)
+        return ref.mha_ref(q, k_, v_, causal=causal, q_offset=q_offset)
+
+    interp = (not _on_tpu()) if interpret is None else interpret
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    fold = lambda x: x.reshape(b * hq, x.shape[2], d)
+    out = flash_attention_bhsd(
+        fold(q), fold(k), fold(v),
+        causal=causal, q_offset=q_offset,
+        block_q=block_q, block_kv=block_kv, interpret=interp,
+    )
+    return out.reshape(b, hq, sq, d)
+
+
+def rwkv6_scan(r, k, v, w, u, state=None):
+    """RWKV6 recurrence; pure-jnp implementation (jax.lax.scan) -- the
+    recurrence is bandwidth-bound and already maps well onto the VPU via
+    scan, so no hand kernel is warranted (see DESIGN.md §5)."""
+    return ref.rwkv6_ref(r, k, v, w, u, state)

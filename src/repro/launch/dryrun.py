@@ -1,0 +1,389 @@
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) cell on the production meshes.
+
+The first two executable lines below -- before ANY other import -- force 512
+placeholder host devices so ``jax.make_mesh((2,16,16))`` can build the 2-pod
+production mesh.  (Smoke tests and benches import the rest of the package
+directly and see the single real CPU device.)
+
+For each valid cell this lowers the *real* step function -- the same
+``make_train_step`` / ``serve_step`` / ``prefill`` code the examples run --
+with allocation-free ShapeDtypeStruct inputs, FSDP/TP/EP/SP shardings from
+the logical-axis rules, compiles it, and records:
+
+  * ``compiled.memory_analysis()``  (per-device bytes -- proves it fits HBM);
+  * ``compiled.cost_analysis()``    (XLA's own numbers, body-counted-once);
+  * loop-aware FLOPs / bytes / collective bytes from
+    :mod:`repro.launch.hlo_analysis` (feeds §Roofline).
+
+CLI:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ARCH_NAMES, SHAPE_NAMES, ModelConfig, ShapeConfig, cell_is_valid,
+    get_config, get_shape,
+)
+from repro.distributed.sharding import (
+    _fit_spec, base_rules, logical_sharding, long_context_rules, use_rules,
+)
+
+
+def _named(mesh, rules, axes, shape):
+    """Divisibility-safe NamedSharding for one array."""
+    return NamedSharding(mesh, _fit_spec(mesh, rules.spec(axes), shape))
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis
+from repro.models import init_cache, init_params, param_axes, cache_axes
+from repro.models.transformer import cache_schema, forward
+from repro.serve.decode import serve_step
+from repro.train.optimizer import make_optimizer, opt_state_axes
+from repro.train.trainer import TrainState, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one cell: {name: (ShapeDtypeStruct, logical axes)}."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.input_kind == "decode":
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        return {"tokens": (tok, ("batch", None))}
+    if cfg.frontend:
+        x = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                 jnp.dtype(cfg.act_dtype))
+        specs = {"inputs": (x, ("batch", "seq", None))}
+    else:
+        specs = {"inputs": (jax.ShapeDtypeStruct((b, s), jnp.int32),
+                            ("batch", "seq"))}
+    if shape.input_kind == "train":
+        specs["labels"] = (jax.ShapeDtypeStruct((b, s), jnp.int32),
+                           ("batch", "seq"))
+    return specs
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeConfig, dp: int) -> int:
+    """Grad-accum depth: big models need small per-microbatch token counts;
+    the microbatch global batch must still cover the DP axis."""
+    if shape.input_kind != "train":
+        return 1
+    if cfg.microbatches_train:
+        want = cfg.microbatches_train
+    else:
+        n = cfg.param_count()
+        want = 16 if n > 2e10 else 8 if n > 5e9 else 4 if n > 2e9 else 1
+    return max(1, min(want, shape.global_batch // dp))
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, multi_pod: bool):
+    if shape.name == "long_500k":
+        return long_context_rules(multi_pod)
+    r = base_rules(multi_pod)
+    # Megatron-SP-style residual sharding keeps big-model activations O(D/TP)
+    r["d_model"] = "model"
+    if cfg.moe is not None and cfg.moe.n_routed % 16 == 0:
+        # True expert parallelism over the model axis (§Perf iteration C4):
+        # the dispatch buffer and expert weights co-shard on the expert dim,
+        # so expert GEMMs run collective-free and only token payloads move.
+        # Guarded on divisibility -- qwen2's 60 experts would replicate and
+        # regress 2.8x in compute (measured), so it keeps EP-via-TP.
+        r["experts"] = "model"
+        r["expert_ff"] = None
+    if cfg.n_heads % 16 != 0 and shape.input_kind != "decode":
+        # Q heads cannot shard 16-way at all (coder 56h, gemma 8h, vl 28h):
+        # context-parallel the attention score tiles over the model axis
+        # instead, so score compute/memory still split 16 ways.  (When heads
+        # DO shard -- e.g. nemotron's 96h with 8 kv -- XLA's (kv, group)
+        # mixed tiling already parallelizes the scores; forcing attn_q there
+        # triggers involuntary full rematerialization.)
+        r["attn_q"] = "model"
+        r["kv_heads"] = None
+        r["heads"] = None
+    if shape.input_kind in ("decode", "prefill"):
+        # KV caches dominate decode/prefill HBM.  Shard heads over the model
+        # axis when divisible; otherwise (GQA kv<16, or MLA's head-free
+        # latent cache) shard the cache's sequence dim -- the softmax then
+        # all-reduces tiny q-len-1 partials (decode) or the cache is only
+        # resharded once at the jit boundary (prefill outputs).
+        if cfg.n_kv_heads % 16 != 0 or cfg.mla is not None:
+            r["kv_seq"] = "model"
+            if shape.input_kind == "decode":
+                r["kv_heads"] = None
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    error: str = ""
+    memory: Dict[str, float] = dataclasses.field(default_factory=dict)
+    xla_cost: Dict[str, float] = dataclasses.field(default_factory=dict)
+    hlo: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    microbatches: int = 1
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def _mem_dict(ma) -> Dict[str, float]:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {k: float(getattr(ma, k, 0)) for k in keys}
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              - out["alias_size_in_bytes"])
+    return out
+
+
+def _cost_dict(ca) -> Dict[str, float]:
+    return {k: float(v) for k, v in ca.items()
+            if k in ("flops", "bytes accessed")}
+
+
+def lower_train(cfg, shape, mesh, rules, mb_override: Optional[int] = None):
+    dp = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    mb = mb_override or pick_microbatches(cfg, shape, dp)
+    okw = {"use_master": False} if cfg.pure_bf16 else {}
+    _, opt = make_optimizer(cfg.optimizer, **okw)
+    accum = "bfloat16" if cfg.param_count() > 1e11 else "float32"
+    step = make_train_step(cfg, opt, microbatches=mb, accum_dtype=accum)
+
+    params_s = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                              jax.random.PRNGKey(0))
+    opt_s = jax.eval_shape(opt.init, params_s)
+    state_s = TrainState(params_s, opt_s,
+                         jax.ShapeDtypeStruct((), jnp.int32))
+
+    p_axes = param_axes(cfg)
+    ocfg, _ = make_optimizer(cfg.optimizer, **okw)
+    o_axes = opt_state_axes(ocfg, params_s, p_axes)
+    p_shard = logical_sharding(mesh, rules, p_axes, params_s)
+    o_shard = logical_sharding(mesh, rules, o_axes, opt_s)
+    state_shard = TrainState(p_shard, o_shard, NamedSharding(mesh, P()))
+
+    specs = input_specs(cfg, shape)
+    batch_s = {k: v[0] for k, v in specs.items()}
+    batch_shard = {
+        k: NamedSharding(mesh, rules.spec(axes))
+        for k, (st, axes) in specs.items()
+    }
+    metrics_shard = NamedSharding(mesh, P())
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_shard, batch_shard),
+        out_shardings=(state_shard, metrics_shard),
+        donate_argnums=(0,),
+    )
+    return jitted, (state_s, batch_s), mb
+
+
+def _serving_params_struct(cfg):
+    """Serving runs bf16 checkpoints regardless of the training param dtype."""
+    s = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                       jax.random.PRNGKey(0))
+    adt = jnp.dtype(cfg.act_dtype)
+    return jax.tree.map(
+        lambda st: jax.ShapeDtypeStruct(
+            st.shape, adt if st.dtype == jnp.float32 else st.dtype), s)
+
+
+def lower_decode(cfg, shape, mesh, rules):
+    params_s = _serving_params_struct(cfg)
+    cache_s = jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch, shape.seq_len))
+    p_axes = param_axes(cfg)
+    c_axes = cache_axes(cfg, shape.global_batch, shape.seq_len)
+    p_shard = logical_sharding(mesh, rules, p_axes, params_s)
+    c_shard = logical_sharding(mesh, rules, c_axes, cache_s)
+
+    specs = input_specs(cfg, shape)
+    tok_s = specs["tokens"][0]
+    tok_shard = _named(mesh, rules, specs["tokens"][1], tok_s.shape)
+
+    def fn(params, caches, tokens, pos):
+        return serve_step(cfg, params, caches, tokens, pos)
+
+    logits_shard = _named(mesh, rules, ("batch", "vocab"),
+                          (shape.global_batch, cfg.vocab))
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_shard, c_shard, tok_shard, NamedSharding(mesh, P())),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,),
+    )
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted, (params_s, cache_s, tok_s, pos_s), 1
+
+
+def lower_prefill(cfg, shape, mesh, rules):
+    params_s = _serving_params_struct(cfg)
+    p_axes = param_axes(cfg)
+    p_shard = logical_sharding(mesh, rules, p_axes, params_s)
+    specs = input_specs(cfg, shape)
+    in_s = specs["inputs"][0]
+    in_shard = _named(mesh, rules, specs["inputs"][1], in_s.shape)
+
+    if cfg.encoder_only:
+        def fn(params, inputs):
+            logits, _, _ = forward(cfg, params, inputs, mode="train",
+                                   remat=False)
+            return logits
+        out_shard = _named(mesh, rules, ("batch", "seq", "vocab"),
+                           (shape.global_batch, shape.seq_len, cfg.vocab))
+    else:
+        def fn(params, inputs):
+            logits, caches, _ = forward(cfg, params, inputs, mode="prefill")
+            return logits[:, -1], caches
+        c_axes = cache_axes(cfg, shape.global_batch, shape.seq_len)
+        cache_s = jax.eval_shape(
+            functools.partial(init_cache, cfg, shape.global_batch,
+                              shape.seq_len))
+        # prefill cache shapes differ from init_cache only in harmless ways
+        # (ring caches are min(window, S)); shardings come from the axes tree.
+        c_shard = logical_sharding(mesh, rules, c_axes, cache_s)
+        out_shard = (_named(mesh, rules, ("batch", "vocab"),
+                            (shape.global_batch, cfg.vocab)),
+                     c_shard)
+
+    jitted = jax.jit(fn, in_shardings=(p_shard, in_shard),
+                     out_shardings=out_shard)
+    return jitted, (params_s, in_s), 1
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False, cfg_overrides: Optional[dict] = None,
+             mb_override: Optional[int] = None,
+             rules_overrides: Optional[dict] = None) -> CellResult:
+    t0 = time.time()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    valid, reason = cell_is_valid(arch, shape_name)
+    if not valid:
+        return CellResult(arch, shape_name, mesh_name, False, 0.0,
+                          error=f"SKIP: {reason}")
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, shape, multi_pod)
+    if rules_overrides:
+        rules.update(rules_overrides)
+    try:
+        with mesh, use_rules(rules, mesh):
+            if shape.input_kind == "train":
+                jitted, args, mb = lower_train(cfg, shape, mesh, rules,
+                                               mb_override=mb_override)
+            elif shape.input_kind == "decode":
+                jitted, args, mb = lower_decode(cfg, shape, mesh, rules)
+            else:
+                jitted, args, mb = lower_prefill(cfg, shape, mesh, rules)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        res = CellResult(arch, shape_name, mesh_name, True,
+                         time.time() - t0, microbatches=mb)
+        res.memory = _mem_dict(compiled.memory_analysis())
+        try:
+            res.xla_cost = _cost_dict(compiled.cost_analysis())
+        except Exception as e:      # cost analysis is best-effort
+            res.xla_cost = {"error": str(e)}
+        txt = compiled.as_text()
+        res.hlo = hlo_analysis.analyze(txt, mesh.size)
+        # CPU XLA legalizes bf16 dots by materializing fp32 shadows of bf16
+        # operands (hoisted over whole caches/weights); TPUs lower bf16
+        # natively, so the fit-proof figure subtracts them (documented in
+        # EXPERIMENTS.md §Dry-run).
+        # Floor at the static argument footprint: the shadow sum counts every
+        # convert instruction (loop clones included) so it can overestimate
+        # what is simultaneously live.
+        floor = (res.memory["argument_size_in_bytes"]
+                 + res.memory["output_size_in_bytes"]
+                 - res.memory["alias_size_in_bytes"])
+        res.memory["tpu_adjusted_hbm_bytes"] = max(
+            floor, res.memory["total_hbm_bytes"] - res.hlo["f32_shadow_bytes"])
+        if keep_hlo:
+            res.hlo["text"] = txt
+        return res
+    except Exception as e:  # noqa: BLE001 -- report, don't crash the sweep
+        return CellResult(arch, shape_name, mesh_name, False,
+                          time.time() - t0, error=f"{type(e).__name__}: {e}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=SHAPE_NAMES)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every valid cell on this mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPE_NAMES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for a, s in cells:
+            r = run_cell(a, s, mp)
+            results.append(r)
+            status = "OK " if r.ok else ("SKIP" if r.error.startswith("SKIP")
+                                         else "FAIL")
+            hbm = r.memory.get("total_hbm_bytes", 0) / 2**30
+            print(f"[{status}] {a:24s} {s:12s} {r.mesh:8s} "
+                  f"{r.seconds:6.1f}s hbm/dev={hbm:6.2f}GiB "
+                  f"flops/dev={r.hlo.get('flops', 0):.3e} "
+                  f"coll/dev={r.hlo.get('collective_bytes', 0):.3e} "
+                  f"{r.error[:80]}")
+            if r.ok:
+                print("    memory_analysis:", json.dumps(r.memory))
+                print("    cost_analysis:  ", json.dumps(r.xla_cost))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([r.to_json() for r in results], f, indent=1)
+        print(f"wrote {args.out}")
+    n_fail = sum(1 for r in results
+                 if not r.ok and not r.error.startswith("SKIP"))
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

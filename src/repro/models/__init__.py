@@ -1,0 +1,13 @@
+"""Model zoo: one generic heterogeneous stack serving all 10 architectures."""
+
+from .transformer import (  # noqa: F401
+    cache_axes,
+    cache_schema,
+    cross_entropy,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    model_schema,
+    param_axes,
+)

@@ -1,0 +1,832 @@
+"""Model primitives: norms, RoPE/M-RoPE, GQA/SWA/MLA attention, dense & MoE
+MLPs, Mamba (S6) and RWKV6 mixers -- pure JAX, no framework dependency.
+
+Parameter convention: every module has a ``*_schema(cfg, ...)`` returning
+``{name: Spec(shape, logical_axes, init)}``.  ``init_from_schema`` materializes
+arrays (smoke tests / real training); ``jax.eval_shape`` over it gives the
+allocation-free ShapeDtypeStructs used by the multi-pod dry-run; the parallel
+axes tree drives pjit shardings.  Activations are annotated with logical axes
+via :func:`repro.distributed.sharding.shard`.
+
+Numerical contract: parameters and activations in ``cfg.act_dtype`` (bf16 at
+scale), every reduction (softmax, norms, scan states, router) in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+# ---------------------------------------------------------------------------
+# Parameter schema machinery
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small_normal
+    scale: float = 1.0
+
+
+def init_from_schema(key: jax.Array, schema: Dict[str, Spec], dtype) -> Dict[str, jax.Array]:
+    out = {}
+    for i, (name, sp) in enumerate(sorted(schema.items())):
+        k = jax.random.fold_in(key, i)
+        if sp.init == "zeros":
+            out[name] = jnp.zeros(sp.shape, dtype)
+        elif sp.init == "ones":
+            out[name] = jnp.ones(sp.shape, dtype)
+        else:
+            fan_in = sp.shape[0] if sp.shape else 1
+            std = sp.scale / math.sqrt(max(fan_in, 1))
+            out[name] = (jax.random.normal(k, sp.shape, jnp.float32) * std).astype(dtype)
+    return out
+
+
+def axes_from_schema(schema: Dict[str, Spec]):
+    return {name: sp.axes for name, sp in schema.items()}
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_schema(d: int, kind: str) -> Dict[str, Spec]:
+    s = {"scale": Spec((d,), (None,), "ones")}
+    if kind == "layernorm":
+        s["bias"] = Spec((d,), (None,), "zeros")
+    return s
+
+
+def apply_norm(p, x, kind: str, eps: float):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [..., S] -> cos/sin [..., S, dim/2] (fp32)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, S, H, D], positions [B, S] (or [S])."""
+    d = x.shape[-1]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = _rope_angles(positions, d, theta)          # [B, S, d/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, theta: float,
+    sections: Tuple[int, int, int],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: ``positions3`` [3, B, S] carries (temporal,
+    height, width) position streams; the rotary feature dim is split into
+    three sections, each rotated by its own stream.  For pure text all three
+    streams are equal and M-RoPE reduces to RoPE exactly."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, d)
+    cos_parts, sin_parts = [], []
+    start = 0
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    for i, sec in enumerate(sections):
+        pos = positions3[i].astype(jnp.float32)            # [B, S]
+        ang = pos[..., None] * freqs[start:start + sec]
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += sec
+    cos = jnp.concatenate(cos_parts, -1)[:, :, None, :]    # [B, S, 1, half]
+    sin = jnp.concatenate(sin_parts, -1)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rotate(cfg, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Dispatch on cfg.rope; ``positions`` is [B,S] or [3,B,S] for mrope."""
+    if cfg.rope == "none":
+        return x
+    if cfg.rope == "mrope":
+        if positions.ndim == 2:                     # text-only: replicate
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full / sliding-window) with decode cache
+# ---------------------------------------------------------------------------
+
+def attn_schema(cfg) -> Dict[str, Spec]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": Spec((d, h, hd), ("fsdp", "heads", None)),
+        "wk": Spec((d, kv, hd), ("fsdp", "kv_heads", None)),
+        "wv": Spec((d, kv, hd), ("fsdp", "kv_heads", None)),
+        "wo": Spec((h, hd, d), ("heads", None, "fsdp")),
+    }
+
+
+#: chunk the q axis whenever the full score matrix would exceed ~this many
+#: elements per (batch x head) -- keeps the fp32 logits tile bounded.
+_ATTN_CHUNK_THRESHOLD = 4096 * 4096
+_ATTN_CHUNK = 512
+
+
+def _sdpa(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+          q_offset: int = 0, kv_valid: Optional[jax.Array] = None,
+          softcap: float = 0.0):
+    """Grouped-query attention with q-axis chunking.
+
+    q [B,S,H,Dk], k [B,T,KV,Dk], v [B,T,KV,Dv] -> [B,S,H,Dv]; fp32 softmax.
+    Masks (causal / sliding window / kv validity) are computed *inside* each
+    chunk from iotas -- nothing [S,T]-shaped is ever materialized, and each
+    chunk is remat'ed so the backward pass replays one chunk at a time.  This
+    is the XLA-level analogue of the Pallas flash kernel (which replaces it on
+    real TPUs); it bounds attention temp memory to O(chunk x T) per head.
+    """
+    b, s, h, dk = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    dv = v.shape[-1]
+    scale = dk ** -0.5
+    qg = q.reshape(b, s, kvh, group, dk)
+
+    from repro.distributed.sharding import current_rules
+
+    def attend(qc: jax.Array, row0) -> jax.Array:
+        """qc [b, c, kvh, g, dk]; rows are global q positions row0 + [0, c).
+        Inputs stay in their storage dtype (bf16 caches are NOT up-converted
+        -- a hoisted fp32 copy of a 32k KV cache costs 2x its HBM); fp32 only
+        in the accumulators via preferred_element_type."""
+        c = qc.shape[1]
+        logits = jnp.einsum("bskgd,btkd->bkgst", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        rules = current_rules()
+        if rules is not None and rules.get("attn_q"):
+            # Context-parallel scores: only for archs whose head counts cannot
+            # shard over the model axis (forcing this when heads DO shard
+            # makes the SPMD partitioner fully rematerialize -- replicating
+            # the score tile -- so the rule table opts in explicitly).
+            logits = shard(logits, ("batch", "kv_heads", None, "attn_q", None))
+        qpos = (row0 + jax.lax.broadcasted_iota(jnp.int32, (c, t), 0)
+                + q_offset)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (c, t), 1)
+        m = jnp.ones((c, t), bool)
+        if causal:
+            m &= kpos <= qpos
+        if window is not None:
+            m &= kpos > qpos - window
+        if kv_valid is not None:
+            m &= kpos <= kv_valid
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        # store probs in the value dtype (bf16): halves the dominant HBM
+        # term of unfused attention; accumulation stays fp32 (§Perf B2).
+        out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, c, h, dv)
+
+    if s * t <= _ATTN_CHUNK_THRESHOLD or s <= _ATTN_CHUNK or s % _ATTN_CHUNK:
+        out = attend(qg, 0)
+    else:
+        nc = s // _ATTN_CHUNK
+        qs = jnp.moveaxis(
+            qg.reshape(b, nc, _ATTN_CHUNK, kvh, group, dk), 1, 0)
+        chunk_fn = jax.checkpoint(attend)          # replay per chunk in bwd
+
+        def body(_, xs):
+            qc, i = xs
+            return None, chunk_fn(qc, i * _ATTN_CHUNK)
+
+        _, outs = jax.lax.scan(body, None,
+                               (qs, jnp.arange(nc, dtype=jnp.int32)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dv)
+    return out.astype(q.dtype)
+
+
+def apply_attn(
+    cfg, p, x, positions, spec, mode: str = "train",
+    cache: Optional[dict] = None, pos=None,
+):
+    """Returns (y, new_cache).  Modes:
+      train   -- full sequence, no cache;
+      prefill -- full sequence, build the cache (ring layout for SWA);
+      decode  -- x is [B,1,d], read+update cache at ``pos``.
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    q = shard(q, ("batch", "seq", "heads", None))
+    k = shard(k, ("batch", "seq", "kv_heads", None))
+    v = shard(v, ("batch", "seq", "kv_heads", None))
+
+    window = spec.window
+
+    if mode == "decode":
+        # positions of the new token(s): pos scalar (cache fill level)
+        newpos = pos + jnp.arange(s)[None, :]                     # [1, s]
+        q = rotate(cfg, q, jnp.broadcast_to(newpos, (b, s)))
+        k = rotate(cfg, k, jnp.broadcast_to(newpos, (b, s)))
+        k_cache, v_cache = cache["k"], cache["v"]
+        cache_len = k_cache.shape[1]
+        slot = (pos % cache_len) if window is not None else pos
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                               (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                               (0, slot, 0, 0))
+        k_cache = shard(k_cache, ("batch", "kv_seq", "kv_heads", None))
+        v_cache = shard(v_cache, ("batch", "kv_seq", "kv_heads", None))
+        if window is not None:
+            # Ring buffer: every live slot is within the window by
+            # construction; mask only the not-yet-filled slots.
+            valid_upto = jnp.minimum(pos, cache_len - 1)
+        else:
+            valid_upto = pos
+        o = _sdpa(q, k_cache, v_cache, causal=False, window=None,
+                  kv_valid=valid_upto, softcap=cfg.logit_softcap)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        pos_ids = jnp.arange(s)[None, :]
+        q = rotate(cfg, q, positions if positions is not None else pos_ids)
+        k = rotate(cfg, k, positions if positions is not None else pos_ids)
+        # Pin K/V to (batch x kv_heads)-sharded, seq-replicated layout right
+        # at the attention boundary: with the residual stream d_model-sharded
+        # (Megatron-SP), propagation otherwise leaves K seq-sharded and the
+        # partitioner all-gathers the fp32 SCORE tile per q-chunk (4 GiB x
+        # 1024 at llama prefill_32k) instead of K once (§Perf iteration B1).
+        k = shard(k, ("batch", None, "kv_heads", None))
+        v = shard(v, ("batch", None, "kv_heads", None))
+        q = shard(q, ("batch", None, "heads", None))
+        o = _sdpa(q, k, v, causal=cfg.causal, window=window,
+                  softcap=cfg.logit_softcap)
+        new_cache = None
+        if mode == "prefill":
+            if window is not None:
+                w = min(window, s)
+                # keep the last `w` positions, laid out in ring order
+                tail_k, tail_v = k[:, s - w:], v[:, s - w:]
+                idx = (jnp.arange(s - w, s)) % window
+                kc = jnp.zeros((b, window) + k.shape[2:], k.dtype)
+                vc = jnp.zeros_like(kc)
+                kc = kc.at[:, idx].set(tail_k)
+                vc = vc.at[:, idx].set(tail_v)
+                new_cache = {"k": kc, "v": vc}
+            else:
+                new_cache = {"k": k, "v": v}
+
+    o = shard(o, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return shard(y, ("batch", "seq", "d_model")), new_cache
+
+
+def attn_cache_schema(cfg, spec, batch: int, max_len: int) -> Dict[str, Spec]:
+    hd = cfg.resolved_head_dim
+    length = min(spec.window, max_len) if spec.window else max_len
+    sh = (batch, length, cfg.n_kv_heads, hd)
+    ax = ("batch", "kv_seq", "kv_heads", None)
+    return {"k": Spec(sh, ax, "zeros"), "v": Spec(sh, ax, "zeros")}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_schema(cfg) -> Dict[str, Spec]:
+    m, d, h = cfg.mla, cfg.d_model, cfg.n_heads
+    return {
+        "wq": Spec((d, h, m.qk_nope_dim + m.qk_rope_dim), ("fsdp", "heads", None)),
+        "w_dkv": Spec((d, m.kv_lora_rank + m.qk_rope_dim), ("fsdp", None)),
+        "w_uk": Spec((m.kv_lora_rank, h, m.qk_nope_dim), ("kv_lora", "heads", None)),
+        "w_uv": Spec((m.kv_lora_rank, h, m.v_head_dim), ("kv_lora", "heads", None)),
+        "wo": Spec((h, m.v_head_dim, d), ("heads", None, "fsdp")),
+        "kv_norm": Spec((m.kv_lora_rank,), (None,), "ones"),
+    }
+
+
+def apply_mla(cfg, p, x, positions, spec, mode="train", cache=None, pos=None):
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = apply_norm({"scale": p["kv_norm"]}, c_kv, "rmsnorm", cfg.norm_eps)
+
+    if mode == "decode":
+        newpos = jnp.broadcast_to(pos + jnp.arange(s)[None, :], (b, s))
+        q_rope = rotate(cfg, q_rope, newpos)
+        k_rope = rotate(cfg, k_rope[:, :, None, :], newpos)[:, :, 0]
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, pos, 0))
+        ckv_c = shard(ckv_c, ("batch", "kv_seq", None))
+        kr_c = shard(kr_c, ("batch", "kv_seq", None))
+        t = ckv_c.shape[1]
+        # Absorbed decode (DESIGN.md §5): score via latent space, never
+        # materializing per-head K/V of length t.
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope.astype(jnp.float32),
+                           p["w_uk"].astype(jnp.float32))          # [B,s,H,R]
+        logits = (
+            jnp.einsum("bshr,btr->bhst", q_lat, ckv_c.astype(jnp.float32))
+            + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                         kr_c.astype(jnp.float32))
+        ) * scale
+        valid = jnp.arange(t)[None, :] <= pos
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, ckv_c.astype(jnp.float32))
+        o = jnp.einsum("bshr,rhv->bshv", o_lat,
+                       p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+    else:
+        pos_ids = positions if positions is not None else jnp.arange(s)[None, :]
+        q_rope = rotate(cfg, q_rope, pos_ids)
+        k_rope = rotate(cfg, k_rope[:, :, None, :], pos_ids)
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhv->bshv", c_kv, p["w_uv"].astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_dim))], -1)
+        qfull = jnp.concatenate([q_nope, q_rope], -1)
+        qfull = shard(qfull, ("batch", "seq", "heads", None))
+        k = shard(k, ("batch", "seq", "heads", None))
+        o = _sdpa(qfull, k, v, causal=cfg.causal)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"ckv": c_kv, "krope": k_rope[:, :, 0]}
+
+    o = shard(o, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype))
+    return shard(y, ("batch", "seq", "d_model")), new_cache
+
+
+def mla_cache_schema(cfg, spec, batch: int, max_len: int) -> Dict[str, Spec]:
+    m = cfg.mla
+    return {
+        "ckv": Spec((batch, max_len, m.kv_lora_rank),
+                    ("batch", "kv_seq", None), "zeros"),
+        "krope": Spec((batch, max_len, m.qk_rope_dim),
+                      ("batch", "kv_seq", None), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_schema(cfg, kind: str) -> Dict[str, Spec]:
+    d, f = cfg.d_model, cfg.d_ff
+    s = {
+        "w_up": Spec((d, f), ("fsdp", "d_ff")),
+        "w_down": Spec((f, d), ("d_ff", "fsdp")),
+    }
+    if kind == "swiglu":
+        s["w_gate"] = Spec((d, f), ("fsdp", "d_ff"))
+    return s
+
+
+def apply_mlp(cfg, p, x, kind: str):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = shard(h, ("batch", "seq", "d_ff"))
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    elif kind == "relu2":      # Nemotron-4 squared-ReLU (Primer)
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    return shard(y, ("batch", "seq", "d_model"))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (shared + routed, capacity-based dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_schema(cfg) -> Dict[str, Spec]:
+    m, d = cfg.moe, cfg.d_model
+    f = m.d_ff_expert or cfg.d_ff
+    s = {
+        "router": Spec((d, m.n_routed), ("fsdp", None), "normal", 0.2),
+        "we_gate": Spec((m.n_routed, d, f), ("experts", "fsdp", "expert_ff")),
+        "we_up": Spec((m.n_routed, d, f), ("experts", "fsdp", "expert_ff")),
+        "we_down": Spec((m.n_routed, f, d), ("experts", "expert_ff", "fsdp")),
+    }
+    if m.n_shared:
+        s["ws_gate"] = Spec((d, m.n_shared * f), ("fsdp", "d_ff"))
+        s["ws_up"] = Spec((d, m.n_shared * f), ("fsdp", "d_ff"))
+        s["ws_down"] = Spec((m.n_shared * f, d), ("d_ff", "fsdp"))
+    return s
+
+
+def apply_moe(cfg, p, x):
+    """Group-local capacity dispatch (GShard/GSPMD-style):
+
+    routing groups are the batch sequences, so every rank/one-hot cumsum is
+    *local to a group* and the dispatch buffer [B, E, cap, d] shards over the
+    data axis alongside the batch -- no global cumsum, no replicated
+    [E, C_global, d] monster (which cost 10 GiB/device before this change).
+    Expert FFN compute additionally shards over the TP axis ("expert_ff").
+    Per-group capacity (vs per-batch) changes drop behaviour slightly; that
+    is the standard GSPMD trade and tests use generous capacity factors.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    f = m.d_ff_expert or cfg.d_ff
+    tk = s * m.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)          # [b, s, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(m.capacity_factor * m.top_k * s / m.n_routed)
+    cap = max(cap, min(8, s * m.top_k))
+    expert = gate_idx.reshape(b, tk)                               # [b, s*k]
+    onehot = jax.nn.one_hot(expert, m.n_routed, dtype=jnp.float32)  # [b,tk,E]
+    onehot = shard(onehot, ("batch", None, None))
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - onehot
+    rank = jnp.einsum("bte,bte->bt", pos_in_expert, onehot).astype(jnp.int32)
+    keep = rank < cap
+    rank_c = jnp.where(keep, rank, cap - 1)
+
+    # token payloads repeated k times along the routing axis
+    src = jnp.repeat(x, m.top_k, axis=1)                           # [b, s*k, d]
+    src = jnp.where(keep[..., None], src, 0)
+
+    def scatter_group(buf_g, e_idx, r_idx, src_g):
+        return buf_g.at[e_idx, r_idx].add(src_g, mode="drop")
+
+    buf = jnp.zeros((b, m.n_routed, cap, d), x.dtype)
+    buf = jax.vmap(scatter_group)(buf, expert, rank_c, src)
+    buf = shard(buf, ("batch", "experts", None, None))
+
+    hg = jnp.einsum("becd,edf->becf", buf, p["we_gate"].astype(x.dtype))
+    hu = jnp.einsum("becd,edf->becf", buf, p["we_up"].astype(x.dtype))
+    hg = shard(hg, ("batch", "experts", None, "expert_ff"))
+    h = jax.nn.silu(hg.astype(jnp.float32)).astype(x.dtype) * hu
+    eo = jnp.einsum("becf,efd->becd", h, p["we_down"].astype(x.dtype))
+    eo = shard(eo, ("batch", "experts", None, None))
+
+    def gather_group(eo_g, e_idx, r_idx):
+        return eo_g[e_idx, r_idx]
+
+    gathered = jax.vmap(gather_group)(eo, expert, rank_c)          # [b, s*k, d]
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    combined = (gathered.reshape(b, s, m.top_k, d).astype(jnp.float32)
+                * gate_vals[..., None]).sum(2).astype(x.dtype)
+
+    if m.n_shared:
+        g = jnp.einsum("bsd,df->bsf", x, p["ws_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["ws_up"].astype(x.dtype))
+        sh_h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        combined = combined + jnp.einsum("bsf,fd->bsd", sh_h,
+                                         p["ws_down"].astype(x.dtype))
+
+    # load-balance aux loss (Switch): mean_prob * mean_assignment per expert
+    density = onehot.reshape(b, s, m.top_k, m.n_routed).sum(2).mean((0, 1))
+    mean_prob = probs.mean((0, 1))
+    aux = (density * mean_prob).sum() * m.n_routed * m.router_aux_weight
+    return shard(combined, ("batch", "seq", "d_model")), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective scan, chunked associative scan)
+# ---------------------------------------------------------------------------
+
+def mamba_schema(cfg) -> Dict[str, Spec]:
+    c, d = cfg.mamba, cfg.d_model
+    d_in = c.expand * d
+    dtr = c.dt_rank or -(-d // 16)
+    return {
+        "in_proj": Spec((d, 2 * d_in), ("fsdp", "d_ff")),
+        "conv_w": Spec((c.d_conv, d_in), (None, "d_ff")),
+        "conv_b": Spec((d_in,), ("d_ff",), "zeros"),
+        "x_proj": Spec((d_in, dtr + 2 * c.d_state), ("d_ff", None)),
+        "dt_w": Spec((dtr, d_in), (None, "d_ff")),
+        "dt_b": Spec((d_in,), ("d_ff",), "ones", 0.01),
+        "a_log": Spec((d_in, c.d_state), ("d_ff", None), "ones"),
+        "d_skip": Spec((d_in,), ("d_ff",), "ones"),
+        "out_proj": Spec((d_in, d), ("d_ff", "fsdp")),
+    }
+
+
+def _mamba_chunk_scan(a, bx, cmat, chunk: int):
+    """h_t = a_t * h_{t-1} + bx_t; y_t = C_t . h_t, computed INSIDE the chunk
+    loop so only y [B,T,D] is ever stacked -- the [B,T,D,S] hidden-state
+    stack (16x larger) never exists in HBM (§Perf, jamba memory term).
+    a/bx: [B,T,D,S] fp32, cmat: [B,T,S] fp32.  Returns (y [B,T,D],
+    h_final [B,D,S])."""
+    B, T, D, S = a.shape
+    nc = T // chunk
+    a = a.reshape(B, nc, chunk, D, S).swapaxes(0, 1)
+    bx = bx.reshape(B, nc, chunk, D, S).swapaxes(0, 1)
+    c = cmat.reshape(B, nc, chunk, S).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    def body(h0, inp):
+        ac, bc, cc = inp                              # [B, chunk, D, S]
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h = aa * h0[:, None] + bb
+        y = jnp.einsum("bqds,bqs->bqd", h, cc)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, D, S), jnp.float32)
+    # remat per chunk: without it the backward saves every chunk's
+    # associative-scan intermediates -- tens of GiB at train_4k scale
+    h_fin, ys = jax.lax.scan(jax.checkpoint(body), h0, (a, bx, c))
+    return ys.swapaxes(0, 1).reshape(B, T, D), h_fin
+
+
+def apply_mamba(cfg, p, x, mode="train", cache=None, pos=None):
+    c = cfg.mamba
+    b, s, d = x.shape
+    d_in = c.expand * d
+    dtr = c.dt_rank or -(-d // 16)
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xz = shard(xz, ("batch", "seq", "d_ff"))
+    u, z = jnp.split(xz, 2, axis=-1)
+
+    if mode == "decode":
+        conv_state = cache["conv"]                     # [B, d_conv-1, d_in]
+        window = jnp.concatenate([conv_state, u], axis=1)
+        new_conv = window[:, 1:]
+        uc = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                        p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+        uc = jax.nn.silu(uc)[:, None]                  # [B,1,d_in]
+    else:
+        pad = jnp.zeros((b, c.d_conv - 1, d_in), u.dtype)
+        up = jnp.concatenate([pad, u], axis=1)
+        uc = sum(
+            up[:, i:i + s].astype(jnp.float32)
+            * p["conv_w"].astype(jnp.float32)[i]
+            for i in range(c.d_conv)
+        ) + p["conv_b"].astype(jnp.float32)
+        uc = jax.nn.silu(uc)
+        new_conv = up[:, -(c.d_conv - 1):] if mode == "prefill" else None
+
+    xdbc = jnp.einsum("bse,ef->bsf", uc.astype(x.dtype), p["x_proj"].astype(x.dtype))
+    dt, bmat, cmat = jnp.split(xdbc, [dtr, dtr + c.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt.astype(jnp.float32),
+                   p["dt_w"].astype(jnp.float32)) + p["dt_b"].astype(jnp.float32)
+    )                                                   # [B,S,d_in]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))        # [d_in, state]
+    da = jnp.exp(dt[..., None] * a)                     # [B,S,d_in,state]
+    bx = (dt * uc)[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+
+    if mode == "decode":
+        h = cache["ssm"].astype(jnp.float32) * da[:, 0] + bx[:, 0]
+        y = jnp.einsum("bds,bs->bd", h, cmat.astype(jnp.float32)[:, 0])[:, None]
+        new_ssm = h
+    else:
+        chunk = min(c.chunk, s)
+        s_pad = -(-s // chunk) * chunk
+        cf = cmat.astype(jnp.float32)
+        if s_pad != s:
+            # pad with identity steps: decay 1, zero input -> state unchanged
+            da = jnp.pad(da, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)),
+                         constant_values=1.0)
+            bx = jnp.pad(bx, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+            cf = jnp.pad(cf, ((0, 0), (0, s_pad - s), (0, 0)))
+        y, h_fin = _mamba_chunk_scan(da, bx, cf, chunk)
+        y = y[:, :s]
+        new_ssm = h_fin if mode == "prefill" else None
+
+    y = y + uc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = shard(y, ("batch", "seq", "d_ff"))
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    out = shard(out, ("batch", "seq", "d_model"))
+    cache_out = None
+    if mode == "prefill":
+        cache_out = {"conv": new_conv.astype(x.dtype), "ssm": new_ssm}
+    elif mode == "decode":
+        cache_out = {"conv": new_conv.astype(x.dtype), "ssm": new_ssm}
+    return out, cache_out
+
+
+def mamba_cache_schema(cfg, spec, batch: int, max_len: int) -> Dict[str, Spec]:
+    c = cfg.mamba
+    d_in = c.expand * cfg.d_model
+    return {
+        "conv": Spec((batch, c.d_conv - 1, d_in), ("batch", None, "d_ff"), "zeros"),
+        "ssm": Spec((batch, d_in, c.d_state), ("batch", "d_ff", None), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) time mix + channel mix
+# ---------------------------------------------------------------------------
+
+def rwkv6_schema(cfg) -> Dict[str, Spec]:
+    c, d = cfg.rwkv, cfg.d_model
+    h = d // c.head_dim
+    k = c.head_dim
+    return {
+        "wr": Spec((d, h, k), ("fsdp", "heads", None)),
+        "wk": Spec((d, h, k), ("fsdp", "heads", None)),
+        "wv": Spec((d, h, k), ("fsdp", "heads", None)),
+        "wg": Spec((d, h, k), ("fsdp", "heads", None)),
+        "wo": Spec((h, k, d), ("heads", None, "fsdp")),
+        "u": Spec((h, k), ("heads", None), "normal", 0.5),
+        "decay_base": Spec((h, k), ("heads", None), "normal", 0.5),
+        "decay_w1": Spec((d, c.decay_lora), ("fsdp", None)),
+        "decay_w2": Spec((c.decay_lora, h, k), (None, "heads", None)),
+        "mix_mu": Spec((5, d), (None, None), "normal", 0.5),
+        "mix_w1": Spec((d, 5 * c.mix_lora), ("fsdp", None)),
+        "mix_w2": Spec((5, c.mix_lora, d), (None, None, None)),
+        "ln_x": Spec((d,), (None,), "ones"),
+    }
+
+
+def _rwkv_chunk(r, k, v, logw, u, chunk: int):
+    """Chunked Finch recurrence.  r/k/v/logw: [B,H,T,K] fp32 (V==K dims).
+    All pairwise decay exponents are differences of a cumulative sum inside
+    one chunk with tau < t, hence <= 0: exp() never overflows (DESIGN.md §5).
+    Returns (out [B,H,T,K], final state [B,H,K,K])."""
+    B, H, T, K = r.shape
+    nc = T // chunk
+
+    def reshape(x):
+        return x.reshape(B, H, nc, chunk, K).transpose(2, 0, 1, 3, 4)
+
+    r, k, v, logw = map(reshape, (r, k, v, logw))       # [nc,B,H,Q,K]
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)   # tau < t
+
+    def body(s0, inp):
+        rc, kc, vc, lw = inp                            # [B,H,Q,K]
+        cum = jnp.cumsum(lw, axis=2)                    # inclusive
+        cum_prev = cum - lw                             # exclusive (t-1)
+        # inter-chunk: r_t . D(exp(cum_prev_t)) . S0   (exponents <= 0)
+        r_dec = rc * jnp.exp(cum_prev)
+        o_inter = jnp.einsum("bhqk,bhkv->bhqv", r_dec, s0)
+        # intra-chunk pairwise decay exp(cum_prev_t - cum_tau), tau < t:
+        # mask in log space *before* exp so no lane ever overflows.  The
+        # decay tile lives in [0,1] -- store it bf16 (halves the dominant
+        # HBM term of this chunk; accumulation stays fp32, §Perf).
+        expo = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,H,Q,T,K]
+        expo = jnp.where(tri[None, None, :, :, None], expo, -jnp.inf)
+        pair = jnp.exp(expo).astype(jnp.bfloat16)
+        scores = jnp.einsum("bhqk,bhqtk,bhtk->bhqt",
+                            rc.astype(jnp.bfloat16), pair,
+                            kc.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        diag = jnp.einsum("bhqk,bhqk->bhq", rc * u[None, :, None, :], kc)
+        o_intra = jnp.einsum("bhqt,bhtv->bhqv", scores, vc) + diag[..., None] * vc
+        # state update: S' = D(exp(cum_Q)) S0 + sum_tau exp(cum_Q - cum_tau) k v
+        total = cum[:, :, -1:]
+        k_dec = kc * jnp.exp(total - cum)
+        s_new = jnp.exp(total.swapaxes(2, 3)) * s0 + jnp.einsum(
+            "bhtk,bhtv->bhkv", k_dec, vc)
+        return s_new, o_inter + o_intra
+
+    s0 = jnp.zeros((B, H, K, K), jnp.float32)
+    # remat per chunk (see _mamba_chunk_scan): the [B,H,Q,Q,K] pairwise-decay
+    # tile is recomputed in the backward instead of being stacked x n_chunks
+    s_fin, outs = jax.lax.scan(jax.checkpoint(body), s0, (r, k, v, logw))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, T, K)
+    return out, s_fin
+
+
+def apply_rwkv6(cfg, p, x, mode="train", cache=None, pos=None):
+    c = cfg.rwkv
+    b, s, d = x.shape
+    h, kd = d // c.head_dim, c.head_dim
+
+    prev = (cache["shift"] if mode == "decode"
+            else jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :s])
+    if mode == "decode":
+        prev = prev  # [B,1,d] token-shift state
+    delta = prev - x
+    # data-dependent token-shift mixes (5 streams: r,k,v,w,g)
+    lora = jnp.tanh(jnp.einsum("bsd,dm->bsm", x, p["mix_w1"].astype(x.dtype)))
+    lora = lora.reshape(b, s, 5, c.mix_lora)
+    mix = p["mix_mu"].astype(jnp.float32)[None, None] + jnp.einsum(
+        "bsfm,fmd->bsfd", lora.astype(jnp.float32),
+        p["mix_w2"].astype(jnp.float32))
+    xs = x[:, :, None, :].astype(jnp.float32) + delta[:, :, None, :].astype(jnp.float32) * mix
+    xr, xk, xv, xw, xg = [xs[:, :, i].astype(x.dtype) for i in range(5)]
+
+    r = jnp.einsum("bsd,dhk->bhsk", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,dhk->bhsk", xg, p["wg"].astype(x.dtype))
+    r = shard(r, ("batch", "heads", "seq", None))
+
+    dec_lora = jnp.tanh(jnp.einsum("bsd,dl->bsl", xw.astype(jnp.float32),
+                                   p["decay_w1"].astype(jnp.float32)))
+    decay = p["decay_base"].astype(jnp.float32)[None, None] + jnp.einsum(
+        "bsl,lhk->bshk", dec_lora, p["decay_w2"].astype(jnp.float32))
+    logw = -jnp.exp(decay).transpose(0, 2, 1, 3)        # [B,H,S,K], < 0
+
+    u = p["u"].astype(jnp.float32)
+    if mode == "decode":
+        state = cache["state"].astype(jnp.float32)      # [B,H,K,V]
+        rf, kf, vf = (t.astype(jnp.float32)[:, :, 0] for t in (r, k, v))
+        kv = kf[:, :, :, None] * vf[:, :, None, :]      # [B,H,K,V]
+        o = jnp.einsum("bhk,bhkv->bhv", rf, state + u[None, :, :, None] * kv)
+        out = o[:, :, None, :]                          # [B,H,1,V]
+        new_state = jnp.exp(logw[:, :, 0])[:, :, :, None] * state + kv
+        new_cache = {"state": new_state, "shift": x}
+    else:
+        chunk = min(c.chunk, s)
+        s_pad = -(-s // chunk) * chunk
+        def padt(t, cval=0.0):
+            return jnp.pad(t, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)),
+                           constant_values=cval)
+        rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+        if s_pad != s:
+            # identity steps: log w = 0 (no decay), k = 0 (no state update)
+            rf, kf, vf, logw = padt(rf), padt(kf), padt(vf), padt(logw)
+        out, final_state = _rwkv_chunk(rf, kf, vf, logw, u, chunk)
+        out = out[:, :, :s]
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"state": final_state, "shift": x[:, -1:]}
+
+    o = out.transpose(0, 2, 1, 3).reshape(b, s, h * kd)
+    o = apply_norm({"scale": p["ln_x"], "bias": jnp.zeros_like(p["ln_x"])},
+                   o.astype(x.dtype), "layernorm", 64e-5)
+    o = o * jax.nn.silu(g.transpose(0, 2, 1, 3).reshape(b, s, h * kd)
+                        .astype(jnp.float32)).astype(x.dtype)
+    o = o.reshape(b, s, h, kd)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return shard(y, ("batch", "seq", "d_model")), new_cache
+
+
+def rwkv6_cache_schema(cfg, spec, batch: int, max_len: int) -> Dict[str, Spec]:
+    c = cfg.rwkv
+    h, k = cfg.d_model // c.head_dim, c.head_dim
+    return {
+        "state": Spec((batch, h, k, k), ("batch", "heads", None, None), "zeros"),
+        "shift": Spec((batch, 1, cfg.d_model), ("batch", None, None), "zeros"),
+    }
+
+
+# RWKV channel-mix uses the generic MLP with relu^2 + receptance gate.
+def rwkv_ffn_schema(cfg) -> Dict[str, Spec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wk_ff": Spec((d, f), ("fsdp", "d_ff")),
+        "wv_ff": Spec((f, d), ("d_ff", "fsdp")),
+        "wr_ff": Spec((d, d), ("fsdp", None)),
+        "mu_ff": Spec((2, d), (None, None), "normal", 0.5),
+    }
+
+
+def apply_rwkv_ffn(cfg, p, x, shift_prev=None):
+    b, s, d = x.shape
+    prev = (shift_prev if shift_prev is not None
+            else jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :s])
+    mu = p["mu_ff"].astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + (prev - x).astype(jnp.float32) * mu[0]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + (prev - x).astype(jnp.float32) * mu[1]).astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk_ff"].astype(x.dtype))
+    k = shard(k, ("batch", "seq", "d_ff"))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv_ff"].astype(x.dtype))
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["wr_ff"].astype(x.dtype)).astype(jnp.float32))
+    return shard((r * v.astype(jnp.float32)).astype(x.dtype), ("batch", "seq", "d_model"))

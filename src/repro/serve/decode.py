@@ -1,0 +1,90 @@
+"""Serving steps: prefill + single-token decode over heterogeneous caches.
+
+``serve_step`` is the function the decode_32k / long_500k dry-run cells lower:
+one new token against a seq_len-deep cache (KV ring buffers for SWA, MLA
+latent caches, Mamba conv+ssm states, RWKV wkv states -- whatever the layer
+pattern dictates).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, init_cache
+
+_SEQ_AXIS_KEYS = {"k": 1, "v": 1, "ckv": 1, "krope": 1}
+
+
+def grow_cache(cfg, caches: Dict[str, Any], max_len: int) -> Dict[str, Any]:
+    """Pad prefill-built caches along the sequence axis to ``max_len`` so
+    decode can keep appending.  Ring-buffer (SWA) and state caches pass
+    through unchanged."""
+
+    _base_ndim = {"k": 4, "v": 4, "ckv": 3, "krope": 3}
+
+    def _layer_spec(path):
+        group = path[0].key          # "prefix" | "blocks"
+        name = path[1].key           # "layerN" | "posJ"
+        idx = int(name.replace("layer", "").replace("pos", ""))
+        return cfg.prefix[idx] if group == "prefix" else cfg.pattern[idx]
+
+    def grow(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name not in _base_ndim:
+            return x
+        spec = _layer_spec(path)
+        if getattr(spec, "window", None):
+            return x                 # ring buffer: fixed at window length
+        # caches are [B, S, ...]; stacked block caches add a leading layer
+        # axis ([R, B, S, ...]), shifting the sequence axis by one.
+        ax = 1 + (x.ndim - _base_ndim[name])
+        cur = x.shape[ax]
+        if cur >= max_len:
+            return x
+        pad = [(0, 0)] * x.ndim
+        pad[ax] = (0, max_len - cur)
+        return jnp.pad(x, pad)
+
+    return jax.tree_util.tree_map_with_path(grow, caches)
+
+
+def prefill(cfg, params, inputs, max_len: Optional[int] = None,
+            positions=None) -> Tuple[jax.Array, Dict[str, Any], jax.Array]:
+    """Run the prompt, return (last-token logits, caches grown to max_len,
+    next position)."""
+    s = inputs.shape[1]
+    logits, caches, _ = forward(cfg, params, inputs, positions=positions,
+                                mode="prefill")
+    if max_len is not None:
+        caches = grow_cache(cfg, caches, max_len)
+    return logits[:, -1], caches, jnp.int32(s)
+
+
+def serve_step(cfg, params, caches, tokens, pos):
+    """One decode step: tokens [B, 1] int32 (or [B, 1, F] embeddings), pos
+    scalar int32 cache fill level.  Returns (logits [B, vocab], new caches)."""
+    logits, new_caches, _ = forward(cfg, params, tokens, mode="decode",
+                                    caches=caches, pos=pos)
+    return logits[:, -1], new_caches
+
+
+def fresh_decode_state(cfg, batch: int, max_len: int):
+    """Zeroed caches + pos for decode-from-scratch (the dry-run entry point)."""
+    return init_cache(cfg, batch, max_len), jnp.int32(0)
+
+
+def greedy_generate(cfg, params, prompt, steps: int, max_len: int):
+    """Tiny autoregressive driver used by examples/tests (CPU-friendly)."""
+    logits, caches, pos = prefill(cfg, params, prompt, max_len)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for _ in range(steps - 1):
+        logits, caches = serve_step(cfg, params, caches, tok, pos)
+        pos = pos + 1
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,6 @@
+"""Training substrate: optimizers, train step, data pipeline, checkpointing."""
+
+from .checkpoint import CheckpointManager  # noqa: F401
+from .data import SkyStoreShardSource, SyntheticTokens  # noqa: F401
+from .optimizer import OptimizerConfig, make_optimizer  # noqa: F401
+from .trainer import TrainState, init_train_state, make_eval_step, make_train_step  # noqa: F401

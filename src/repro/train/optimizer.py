@@ -1,0 +1,217 @@
+"""Optimizers over parameter pytrees: AdamW and Adafactor.
+
+Written against plain pytrees (no optax dependency in this offline image).
+Moment dtypes are configurable so the 340B dry-run can trade optimizer-state
+HBM for precision (see configs/nemotron_4_340b.py); Adafactor factors the
+second moment of any rank>=2 weight into row+col statistics, which is what
+actually makes the 340B cell fit 256 x 16 GB.
+
+State layout mirrors the param tree leaf-for-leaf, so FSDP sharding rules for
+parameters apply verbatim to optimizer state (the dry-run shards both).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"     # bf16 halves optimizer HBM
+    use_master: Optional[bool] = None  # None: auto (master iff params < fp32);
+    # False: pure low-precision training, update in param dtype (pair with
+    # stochastic rounding on hardware) -- the 340B recipe
+    warmup_steps: int = 100
+    # adafactor
+    decay_rate: float = 0.8
+    min_dim_factored: int = 128
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+
+
+def _schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def _needs_master(cfg: OptimizerConfig, params) -> bool:
+    """A separate fp32 master copy is only needed when the working params are
+    low precision AND the config hasn't opted into pure low-precision
+    training (the 340B recipe, see configs/nemotron_4_340b.py)."""
+    if cfg.use_master is not None:
+        return cfg.use_master
+    return any(p.dtype != jnp.float32 for p in jax.tree.leaves(params))
+
+
+def make_adamw(cfg: OptimizerConfig) -> Optimizer:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init(params):
+        state = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        }
+        if _needs_master(cfg, params):
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(params, grads, state, step):
+        grads, gnorm = _clip_by_global_norm(grads, cfg.grad_clip)
+        lr = _schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - cfg.b1 ** t
+        c2 = 1.0 - cfg.b2 ** t
+        masters = state.get("master", params)
+
+        def upd(master, g, m, v):
+            m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+            v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+            step_ = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+            master_new = (master.astype(jnp.float32)
+                          - lr * (step_ + cfg.weight_decay * master.astype(jnp.float32)))
+            return master_new, m_new.astype(mdt), v_new.astype(mdt)
+
+        out = jax.tree.map(upd, masters, grads, state["m"], state["v"])
+        is_pair = lambda x: isinstance(x, tuple)
+        master = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=is_pair)
+        params_new = jax.tree.map(
+            lambda mast, p: mast.astype(p.dtype), master, params)
+        new_state = {"m": m, "v": v}
+        if "master" in state:
+            new_state["master"] = master
+        return params_new, new_state
+
+    return Optimizer(init, update)
+
+
+def make_adafactor(cfg: OptimizerConfig) -> Optimizer:
+    """Factored second moment (Shazeer & Stern, arXiv:1804.04235), no first
+    moment: optimizer state ~= params fp32 master + O(rows+cols) stats."""
+
+    def _factored(shape) -> bool:
+        return (len(shape) >= 2
+                and shape[-1] >= cfg.min_dim_factored
+                and shape[-2] >= cfg.min_dim_factored)
+
+    def init(params):
+        def mk(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        state = {"stats": jax.tree.map(mk, params)}
+        if _needs_master(cfg, params):
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(params, grads, state, step):
+        grads, gnorm = _clip_by_global_norm(grads, cfg.grad_clip)
+        lr = _schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-cfg.decay_rate)
+        masters = state.get("master", params)
+
+        def upd(master, g, st):
+            master = master.astype(jnp.float32)
+            g2 = g * g + 1e-30
+            if "vr" in st:
+                vr = beta2 * st["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+                prec = jax.lax.rsqrt(denom + cfg.eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                prec = jax.lax.rsqrt(v + cfg.eps)
+                new_st = {"v": v}
+            upd_ = g * prec
+            # update clipping (RMS <= 1), as in the paper
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-30)
+            upd_ = upd_ / jnp.maximum(1.0, rms)
+            master_new = master - lr * (upd_ + cfg.weight_decay * master)
+            return master_new, new_st
+
+        out = jax.tree.map(
+            upd, masters, grads, state["stats"],
+            is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x),
+        )
+        is_pair = lambda x: isinstance(x, tuple)
+        master = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+        stats = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+        params_new = jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)
+        new_state = {"stats": stats}
+        if "master" in state:
+            new_state["master"] = master
+        return params_new, new_state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Tuple[OptimizerConfig, Optimizer]:
+    cfg = OptimizerConfig(name=name, **kw)
+    if name == "adamw":
+        return cfg, make_adamw(cfg)
+    if name == "adafactor":
+        return cfg, make_adafactor(cfg)
+    raise KeyError(name)
+
+
+def opt_state_axes(cfg: OptimizerConfig, params_struct, axes_tree):
+    """Logical-axes tree mirroring the optimizer state layout, so optimizer
+    shards exactly like parameters (FSDP).  Adafactor's factored statistics
+    drop the reduced dimension's axis."""
+    has_master = _needs_master(cfg, params_struct)
+    if cfg.name == "adamw":
+        out = {"m": axes_tree, "v": axes_tree}
+        if has_master:
+            out["master"] = axes_tree
+        return out
+
+    def _factored(shape) -> bool:
+        return (len(shape) >= 2
+                and shape[-1] >= cfg.min_dim_factored
+                and shape[-2] >= cfg.min_dim_factored)
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+    def stat_axes(axes, st):
+        if _factored(st.shape):
+            return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+        return {"v": axes}
+
+    stats = jax.tree.map(stat_axes, axes_tree, params_struct, is_leaf=is_axes)
+    out = {"stats": stats}
+    if has_master:
+        out["master"] = axes_tree
+    return out

@@ -1,0 +1,116 @@
+"""Training step construction: grad accumulation, mixed precision, remat,
+optional gradient compression across the pod axis.
+
+``make_train_step(cfg, shape)`` returns a pure ``step(state, batch) ->
+(state, metrics)`` ready for ``jax.jit`` with shardings -- this is exactly the
+function the train_4k dry-run cells lower on the production mesh.
+
+Grad accumulation runs as ``jax.lax.scan`` over the microbatch axis so the
+lowered HLO is O(1) in microbatch count (the 340B cell uses 16 microbatches;
+an unrolled loop would not compile in reasonable time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.distributed.compression import compress_grads_int8, decompress_grads_int8
+from .optimizer import Optimizer, OptimizerConfig, make_optimizer
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: s.tree_flatten(),
+    lambda aux, ch: TrainState.tree_unflatten(aux, ch),
+)
+
+
+def init_train_state(cfg, params, opt: Optimizer) -> TrainState:
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+
+def make_train_step(
+    cfg,
+    optimizer: Optimizer,
+    microbatches: int = 1,
+    compress_pod_grads: bool = False,
+    accum_dtype: str = "float32",
+):
+    """Returns step(state, batch); batch["inputs"]/["labels"]: [B, S] with B
+    the *global* batch.  With microbatches > 1, B splits into [n_mb, B/n_mb]
+    and gradients accumulate across a lax.scan in ``accum_dtype`` (fp32 by
+    default; 100B+ configs use bf16 accumulation to halve the accumulator's
+    HBM -- pair with stochastic rounding on real hardware)."""
+    adt = jnp.dtype(accum_dtype)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state.params
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+
+            def accum(carry, mbatch):
+                g_acc, loss_acc = carry
+                loss, _metrics, g = grads_of(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(adt), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            (g_sum, loss_sum), _ = jax.lax.scan(accum, (zero, 0.0), mb)
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / microbatches, g_sum)
+            loss = loss_sum / microbatches
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if compress_pod_grads:
+            # int8 quantize-dequantize models the cross-pod compressed
+            # all-reduce (distributed/compression.py); under SPMD the real
+            # collective is inserted by XLA at the sharding boundary.
+            grads = decompress_grads_int8(*compress_grads_int8(grads))
+
+        new_params, new_opt = optimizer.update(
+            params, grads, state.opt_state, state.step)
+        new_state = TrainState(new_params, new_opt, state.step + 1)
+        metrics = dict(metrics, loss=loss, step=state.step)
+        return new_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(cfg, params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,133 @@
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import VirtualStore, make_backends, pick_regions
+from repro.distributed.fault_tolerance import FleetController, kill_region
+from repro.train.checkpoint import CheckpointManager
+
+
+@pytest.fixture
+def store():
+    cat = pick_regions(3)
+    be = make_backends(list(cat.region_names()), "memory")
+    vs = VirtualStore(cat, be, mode="FB")
+    return cat, be, vs
+
+
+def tree():
+    return {
+        "layer": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                  "b": np.zeros(4, np.float32)},
+        "step_arr": np.int32(7),
+    }
+
+
+def test_checkpoint_roundtrip(store):
+    cat, be, vs = store
+    a = cat.region_names()[0]
+    ck = CheckpointManager(vs, "ckpt", a)
+    t = tree()
+    ck.save(10, t)
+    back = ck.restore(like=t)
+    for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(x, y)
+    assert ck.latest_step() == 10
+
+
+def test_cross_region_restore_pays_egress_once(store):
+    cat, be, vs = store
+    a, b, _ = cat.region_names()
+    ck = CheckpointManager(vs, "ckpt", a)
+    ck.save(1, tree())
+    before = vs.transfers.dollars
+    ck.restore(region=b, like=tree())       # remote restore: pays egress
+    mid = vs.transfers.dollars
+    assert mid > before
+    ck.restore(region=b, like=tree())       # replicas cached: free now
+    assert vs.transfers.dollars == pytest.approx(mid)
+
+
+def test_region_outage_drill(store):
+    """Kill the base region's physical bytes; restore must succeed from the
+    surviving replicas created by an earlier cross-region read."""
+    cat, be, vs = store
+    a, b, _ = cat.region_names()
+    ck = CheckpointManager(vs, "ckpt", a)
+    t = tree()
+    ck.save(5, t)
+    ck.restore(region=b, like=t)            # replicate everything to b
+    kill_region(be, a)                      # region a is gone
+    back = ck.restore(region=b, like=t)     # b's replicas serve the restore
+    np.testing.assert_array_equal(back["layer"]["w"], t["layer"]["w"])
+
+
+def test_retention_gc(store):
+    cat, be, vs = store
+    a = cat.region_names()[0]
+    ck = CheckpointManager(vs, "ckpt", a, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree())
+    steps = {int(k.split("/")[-2])
+             for k in vs.list_objects("ckpt", prefix="model/manifest/")}
+    assert steps == {3, 4}
+
+
+def test_fleet_failure_detection_and_recovery(store):
+    cat, be, vs = store
+    a, b, _ = cat.region_names()
+    ck = CheckpointManager(vs, "ckpt", a)
+    ck.save(42, tree())
+
+    now = [0.0]
+    fc = FleetController(ck, grace_seconds=10.0, clock=lambda: now[0])
+    for i in range(4):
+        fc.register(f"host{i}", a if i < 2 else b)
+    now[0] = 15.0
+    for i in range(3):
+        fc.heartbeat(f"host{i}")
+    now[0] = 20.0                      # host3 silent past the grace window
+    failed = fc.detect_failures()
+    assert failed == ["host3"]
+    step, t = fc.recover(like=tree(), into_region=b)
+    assert step == 42
+
+    # deterministic, rebalancing shard assignment over healthy hosts
+    a1 = fc.assignment(step=1, n_shards=8)
+    a2 = fc.assignment(step=1, n_shards=8)
+    assert a1 == a2
+    assert sorted(sum(a1.values(), [])) == list(range(8))
+    assert "host3" not in a1
+    assert fc.assignment(step=2, n_shards=8) != a1    # rotates each step
+
+
+def test_straggler_demotion(store):
+    cat, be, vs = store
+    ck = CheckpointManager(vs, "ckpt", cat.region_names()[0])
+    now = [0.0]
+    fc = FleetController(ck, straggler_factor=2.0, demote_after=2,
+                         clock=lambda: now[0])
+    fc.register("fast", "r")
+    fc.register("slow", "r")
+    for _ in range(3):
+        fc.heartbeat("fast", step_seconds=1.0, median_step=1.0)
+        fc.heartbeat("slow", step_seconds=5.0, median_step=1.0)
+    names = [h.name for h in fc.healthy_hosts()]
+    assert names == ["fast"]
+
+
+def test_elastic_mesh_shrinks(store):
+    cat, be, vs = store
+    ck = CheckpointManager(vs, "ckpt", cat.region_names()[0])
+    now = [0.0]
+    fc = FleetController(ck, grace_seconds=1.0, clock=lambda: now[0])
+    for i in range(64):
+        fc.register(f"h{i}", "r")
+    assert fc.elastic_mesh_shape(chips_per_host=4) == (16, 16)
+    now[0] = 10.0                      # everyone times out except 32 hosts
+    for i in range(32):
+        fc.heartbeat(f"h{i}")
+    fc.detect_failures()
+    assert fc.elastic_mesh_shape(chips_per_host=4) == (8, 16)

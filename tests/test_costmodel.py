@@ -1,0 +1,71 @@
+import numpy as np
+import pytest
+
+from repro.core import default_catalog, paper_2region_catalog, pick_regions, tpu_tier_catalog
+from repro.core.costmodel import GB, SECONDS_PER_MONTH
+
+
+def test_paper_worked_example_t_even():
+    # §3.1.1: S=$0.026/GB/mo at aws:us-west-1, N=$0.02/GB => T_even ~ 0.77 mo
+    cat = paper_2region_catalog()
+    te = cat.t_even_months("aws:us-east-1", "aws:us-west-1")
+    assert te == pytest.approx(0.02 / 0.026, rel=1e-9)
+    assert 0.75 < te < 0.80
+    assert cat.t_even_seconds("aws:us-east-1", "aws:us-west-1") == pytest.approx(
+        te * SECONDS_PER_MONTH)
+
+
+def test_intra_region_egress_free_and_asymmetric_catalog():
+    cat = default_catalog()
+    for r in cat.region_names():
+        assert cat.egress_price(r, r) == 0.0
+    # cross-cloud costs more than intra-cloud (the 23x claim, §2.1)
+    intra = cat.egress_price("aws:us-east-1", "aws:us-west-2")
+    cross = cat.egress_price("gcp:us-east1", "aws:us-east-1")
+    assert cross > intra
+
+
+def test_storage_and_transfer_accounting():
+    cat = default_catalog()
+    # 1 GB stored 1 month == the listed price
+    c = cat.storage_cost("aws:us-east-1", GB, SECONDS_PER_MONTH)
+    assert c == pytest.approx(0.023)
+    t = cat.transfer_cost("aws:us-east-1", "aws:us-west-2", GB)
+    assert t == pytest.approx(0.02)
+
+
+def test_cheapest_source_prefers_local_then_cheapest():
+    cat = pick_regions(3)
+    regs = cat.region_names()
+    assert cat.cheapest_source(regs, regs[0]) == regs[0]
+    src = cat.cheapest_source([regs[1], regs[2]], regs[0])
+    assert cat.egress_price(src, regs[0]) == min(
+        cat.egress_price(regs[1], regs[0]), cat.egress_price(regs[2], regs[0]))
+
+
+def test_subsets_match_paper_experiments():
+    assert len(pick_regions(3).region_names()) == 3
+    assert len(pick_regions(6).region_names()) == 6
+    assert len(pick_regions(9).region_names()) == 9
+    with pytest.raises(ValueError):
+        pick_regions(4)
+    # one region from each provider in the 3-region setup (footnote 3)
+    provs = {r.split(":")[0] for r in pick_regions(3).region_names()}
+    assert provs == {"aws", "azure", "gcp"}
+
+
+def test_latency_model_orders():
+    cat = pick_regions(3)
+    a, b, _ = cat.region_names()
+    local = cat.get_latency_ms(a, a, 10 * 2**20)
+    remote = cat.get_latency_ms(b, a, 10 * 2**20)
+    assert remote > local
+
+
+def test_tpu_tier_catalog_t_even_ordering():
+    # DESIGN.md §5: HBM residency break-even is seconds; host-tier is hours.
+    cat = tpu_tier_catalog()
+    hbm = cat.t_even_seconds("tier:host", "tier:hbm")
+    host = cat.t_even_seconds("tier:store", "tier:host")
+    assert hbm < 120.0
+    assert host > 3600.0

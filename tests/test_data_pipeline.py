@@ -1,0 +1,69 @@
+import numpy as np
+import pytest
+
+from repro.core import VirtualStore, make_backends, pick_regions
+from repro.serve.kv_tier import KVTierManager
+from repro.train.data import SkyStoreShardSource, SyntheticTokens
+
+
+def test_synthetic_tokens_shape_and_determinism():
+    a = list(zip(range(3), SyntheticTokens(100, 8, 4, seed=1)))
+    b = list(zip(range(3), SyntheticTokens(100, 8, 4, seed=1)))
+    for (_, x), (_, y) in zip(a, b):
+        np.testing.assert_array_equal(x["inputs"], y["inputs"])
+        assert x["inputs"].shape == (4, 8)
+        np.testing.assert_array_equal(x["inputs"][:, 1:], x["labels"][:, :-1])
+
+
+@pytest.fixture
+def store():
+    cat = pick_regions(3)
+    be = make_backends(list(cat.region_names()), "memory")
+    return cat, VirtualStore(cat, be, mode="FB")
+
+
+def test_skystore_shard_source_epochs(store):
+    """First epoch pays egress into the training region; later epochs hit the
+    replicate-on-read copies -- the paper's §1 training workload."""
+    cat, vs = store
+    base, train_region = cat.region_names()[0], cat.region_names()[2]
+    SkyStoreShardSource.write_corpus(vs, "corpus", base, n_shards=4,
+                                     tokens_per_shard=9 * 4, vocab=50)
+    src = SkyStoreShardSource(vs, "corpus", train_region, batch=4, seq_len=8)
+    assert vs.transfers.dollars == 0.0
+    for _ in range(4):                       # epoch 1: remote reads
+        b1 = next(src)
+        assert b1["inputs"].shape == (4, 8)
+    paid = vs.transfers.dollars
+    assert paid > 0
+    for _ in range(4):                       # epoch 2 wraps the same shards
+        next(src)
+    assert vs.transfers.dollars == pytest.approx(paid)   # all local hits now
+
+
+def test_kv_tier_promote_demote():
+    now = [0.0]
+    tier = KVTierManager(clock=lambda: now[0])
+    tier.insert("p1", 1 << 20)
+    assert tier.lookup("p1").tier == "tier:hbm"
+    # age it past the hbm TTL; scan demotes one tier
+    now[0] = tier.blocks["p1"].ttl + 1.0
+    moves = tier.scan()
+    assert moves and moves[0][1] == "tier:hbm" and moves[0][2] == "tier:host"
+    # re-access promotes back to hbm and records the gap
+    blk = tier.lookup("p1")
+    assert blk.tier == "tier:hbm"
+    assert tier.stats["promotions"] == 1
+    assert tier.lookup("missing") is None
+    occ = tier.occupancy()
+    assert occ["tier:hbm"] == 1 << 20
+
+
+def test_kv_tier_never_drops_last_copy():
+    now = [0.0]
+    tier = KVTierManager(clock=lambda: now[0])
+    tier.insert("p", 1024)
+    for _ in range(6):                      # demote all the way down
+        now[0] += max(tier.blocks["p"].ttl, 1.0) + 1.0
+        tier.scan()
+    assert tier.blocks["p"].tier == "tier:store"   # FB-base analogue: kept

@@ -1,0 +1,57 @@
+import numpy as np
+import pytest
+
+from repro.core.histogram import (
+    LOG_BASE, N_LINEAR, N_LOG, AccessHistogram, RollingHistogram, cell_edges,
+)
+
+
+def test_cell_layout_matches_paper():
+    edges = cell_edges()
+    assert edges.shape == (N_LINEAR + N_LOG,)          # 800 cells (§3.2.3)
+    # first minute at per-second granularity
+    np.testing.assert_allclose(edges[:60], np.arange(1, 61))
+    # log cells: consecutive TTL candidates differ by <= 2%
+    ratios = edges[61:] / edges[60:-1]
+    assert np.all(ratios <= LOG_BASE + 1e-9)
+    # covers (1.02)^740 minutes -- years of range
+    assert edges[-1] > 2 * 365 * 24 * 3600
+
+
+def test_add_gaps_mass_and_mean():
+    h = AccessHistogram.empty()
+    h.add_gaps(np.array([0.5, 30.2, 30.4, 3600.0]), np.array([1.0, 2.0, 2.0, 8.0]))
+    assert h.total_reread_bytes == pytest.approx(13.0)
+    # exact weighted mean inside a shared cell (both gaps in (30, 31])
+    cell = h.cell_of(np.array([30.2]))[0]
+    assert cell == h.cell_of(np.array([30.4]))[0]
+    assert h.hist[cell] == pytest.approx(4.0)
+    assert h.t_hat()[cell] == pytest.approx((30.2 * 2 + 30.4 * 2) / 4)
+
+
+def test_gap_beyond_range_clamps_to_top_cell():
+    h = AccessHistogram.empty()
+    h.add_gaps(np.array([1e12]), np.array([5.0]))
+    assert h.hist[-1] == pytest.approx(5.0)
+
+
+def test_last_census_and_merge_semantics():
+    roll = RollingHistogram()
+    roll.current.add_gaps(np.array([10.0]), np.array([1.0]))
+    roll.current.add_last(np.array([100.0]), np.array([7.0]))
+    roll.rotate(now=1000.0)
+    roll.current.add_gaps(np.array([20.0]), np.array([2.0]))
+    roll.current.add_last(np.array([50.0]), np.array([3.0]))
+    m = roll.merged()
+    # gaps accumulate across windows...
+    assert m.total_reread_bytes == pytest.approx(3.0)
+    # ...but the pause census comes from the current snapshot only (no
+    # double counting -- the bug class fixed in ttl_policy development)
+    assert m.total_last_bytes == pytest.approx(3.0)
+
+
+def test_decay_ages_old_statistics():
+    h = AccessHistogram.empty()
+    h.add_gaps(np.array([10.0]), np.array([4.0]))
+    h.decay(0.5)
+    assert h.total_reread_bytes == pytest.approx(2.0)

@@ -1,0 +1,83 @@
+"""Unit tests for the loop-aware HLO analyzer on hand-crafted HLO text."""
+
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+HLO = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %iter = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%iter, %c), direction=LT
+}
+
+%body.2 (p2: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %it = s32[] get-tuple-element(%p2), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p2), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.5 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.5), channel_id=1, replica_groups=[4,2]<=[8], use_global_device_ids=true, to_apply=%add.red
+  %one = s32[] constant(1)
+  %nit = s32[] add(%it, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%nit, %ar)
+}
+
+%add.red (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.9 () -> f32[] {
+  %init = (s32[], f32[8,16]) tuple()
+  %while.3 = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.2
+  %res = f32[8,16]{1,0} get-tuple-element(%while.3), index=1
+  %big = f32[12,8,16]{2,1,0} constant({...})
+  ROOT %out = f32[] reduce(%res), dimensions={0,1}, to_apply=%add.red
+}
+"""
+
+
+def test_parse_and_multipliers():
+    comps = H.parse_hlo(HLO)
+    assert {"cond.1", "body.2", "add.red", "main.9"} <= set(comps)
+    mult = H.computation_multipliers(comps)
+    assert mult["main.9"] == 1.0
+    assert mult["body.2"] == 12.0          # trip count from cond constant
+    trips = H.body_trip_counts(comps)
+    assert trips == {"body.2": 12}
+
+
+def test_flops_scaled_by_trip_count():
+    res = H.analyze(HLO, n_devices=8)
+    # dot: 2 * 8*16 (out) * 16 (contraction) = 4096 flops, x12 trips
+    assert res["flops"] == pytest.approx(4096 * 12)
+    assert res["dot_flops_once"] == pytest.approx(4096)
+
+
+def test_collective_ring_model():
+    res = H.analyze(HLO, n_devices=8)
+    # all-reduce of f32[8,16] = 512B, group size 2 => 2*512*(1/2)=512 per exec
+    assert res["collective_bytes"] == pytest.approx(512 * 12)
+    assert res["collective_counts"]["all-reduce"] == 12
+
+
+def test_xs_stack_window_counting():
+    hlo = HLO.replace(
+        "%dot.5 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+        "%stk = f32[12,8,16]{2,1,0} parameter(1)\n"
+        "  %dot.5 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n"
+        "  %sl = f32[1,8,16]{2,1,0} dynamic-slice(%stk, %it), dynamic_slice_sizes={1,8,16}",
+    )
+    res = H.analyze(hlo, n_devices=8)
+    assert res["flops"] == pytest.approx(4096 * 12)   # unchanged
+
+
+def test_tuple_shape_parsing():
+    shapes = H._parse_shape("(s32[], f32[8,16], bf16[4,4])")
+    assert ("f32", (8, 16)) in shapes and ("bf16", (4, 4)) in shapes
+    assert H._nbytes(shapes) == 4 + 8 * 16 * 4 + 4 * 4 * 2

@@ -1,0 +1,58 @@
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import paper_2region_catalog
+from repro.core.lifecycle import (
+    LifecycleRule, compile_rules, enforce_rule_cap, fidelity_report,
+    to_s3_json,
+)
+from repro.core.ttl_policy import AdaptiveTTLController, EdgeTTL
+
+DAY = 24 * 3600.0
+
+
+def _controller_with_ttls(ttls):
+    cat = paper_2region_catalog()
+    ctl = AdaptiveTTLController(cat)
+    for i, (bucket, ttl) in enumerate(ttls):
+        ctl.edge_ttls[(bucket, "aws:us-east-1", "aws:us-west-1")] = EdgeTTL(
+            ttl, chosen_at=0.0)
+    return ctl
+
+
+def test_compile_rounds_up_to_days_and_takes_min_edge():
+    ctl = _controller_with_ttls([("logs", 1.4 * DAY), ("models", 0.2 * DAY)])
+    ctl.edge_ttls[("logs", "aws:us-west-1", "aws:us-west-1x")] = EdgeTTL(
+        99 * DAY, 0.0)   # different target region: ignored
+    rules = compile_rules(ctl, "aws:us-west-1")
+    assert rules["logs"][0].expiration_days == 2      # ceil(1.4)
+    assert rules["models"][0].expiration_days == 1    # provider floor: 1 day
+    assert rules["models"][0].rounding_error_seconds > 0
+
+
+def test_rule_cap_merges_toward_shorter_expiry():
+    rules = [LifecycleRule(f"r{i}", f"p{i}/", i + 1, (i + 1) * DAY)
+             for i in range(1500)]
+    capped = enforce_rule_cap(rules, cap=1000)
+    assert len(capped) == 1000
+    # safety direction: no merged rule retains LONGER than either source
+    assert min(r.expiration_days for r in capped) == 1
+    assert max(r.expiration_days for r in capped) == 1500
+
+
+def test_s3_json_shape():
+    rules = [LifecycleRule("a", "x/", 3, 2.5 * DAY)]
+    doc = json.loads(to_s3_json(rules))
+    assert doc["Rules"][0]["Expiration"]["Days"] == 3
+    assert doc["Rules"][0]["Filter"]["Prefix"] == "x/"
+
+
+def test_fidelity_report_flags_subday_ttls():
+    rules = [LifecycleRule("a", "x/", 1, 600.0),         # 10-minute TTL!
+             LifecycleRule("b", "y/", 5, 4.6 * DAY)]
+    rep = fidelity_report(rules)
+    assert rep["rules"] == 2
+    assert rep["subday_ttls_lost"] == 1
+    assert rep["max_rounding_s"] == pytest.approx(DAY - 600.0)

@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (required by the assignment): a REDUCED
+config of each family runs one forward/train step on CPU with correct output
+shapes and no NaNs; decode-capable archs additionally prove prefill+decode
+consistency against the full forward pass."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import forward, init_params
+from repro.serve import prefill, serve_step
+from repro.train import init_train_state, make_optimizer, make_train_step
+
+
+def _inputs(cfg, key, b=2, s=16):
+    if cfg.frontend:
+        return jax.random.normal(key, (b, s, cfg.frontend_dim), jnp.float32)
+    return jax.random.randint(key, (b, s), 0, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 16
+    x = _inputs(cfg, jax.random.PRNGKey(1), b, s)
+    logits, _, aux = forward(cfg, params, x, mode="train")
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    _, opt = make_optimizer(cfg.optimizer, lr=1e-3, warmup_steps=1)
+    step = jax.jit(make_train_step(cfg, opt, microbatches=2))
+    state = init_train_state(cfg, params, opt)
+    b, s = 4, 16
+    if cfg.frontend:
+        batch = {"inputs": jax.random.normal(jax.random.PRNGKey(2),
+                                             (b, s, cfg.frontend_dim)),
+                 "labels": jax.random.randint(jax.random.PRNGKey(3),
+                                              (b, s), 0, cfg.vocab)}
+    else:
+        toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + 1),
+                                  0, cfg.vocab)
+        batch = {"inputs": toks[:, :-1], "labels": toks[:, 1:]}
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_NAMES if not get_config(a).encoder_only])
+def test_decode_matches_full_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, cfg.vocab)
+    full_logits, _, _ = forward(cfg, params, toks, mode="train")
+    lg, caches, pos = prefill(cfg, params, toks, max_len=s + 8)
+    assert float(jnp.abs(full_logits[:, -1] - lg).max()) < 2e-3
+
+    nxt = jax.random.randint(jax.random.PRNGKey(7), (b, 1), 0, cfg.vocab)
+    ext = jnp.concatenate([toks, nxt], 1)
+    full2, _, _ = forward(cfg, params, ext, mode="train")
+    lg2, caches = serve_step(cfg, params, caches, nxt, pos)
+    assert float(jnp.abs(full2[:, -1] - lg2).max()) < 2e-3
+
+
+def test_overfits_fixed_batch():
+    cfg = get_config("llama3.2-1b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    _, opt = make_optimizer("adamw", lr=5e-3, warmup_steps=1)
+    step = jax.jit(make_train_step(cfg, opt))
+    state = init_train_state(cfg, params, opt)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 17), 0, cfg.vocab)
+    batch = {"inputs": toks[:, :-1], "labels": toks[:, 1:]}
+    first = None
+    for _ in range(12):
+        state, metrics = step(state, batch)
+        first = first if first is not None else float(metrics["loss"])
+    assert float(metrics["loss"]) < first - 1.0
+
+
+def test_microbatch_equivalence():
+    """Grad accumulation must match the single-batch gradient path."""
+    cfg = get_config("llama3.2-1b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    _, opt = make_optimizer("adamw", lr=1e-3, warmup_steps=1)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 17), 0, cfg.vocab)
+    batch = {"inputs": toks[:, :-1], "labels": toks[:, 1:]}
+    outs = []
+    for mb in (1, 2, 4):
+        step = jax.jit(make_train_step(cfg, opt, microbatches=mb))
+        state = init_train_state(cfg, params, opt)
+        state, metrics = step(state, batch)
+        outs.append((float(metrics["loss"]),
+                     np.asarray(jax.tree.leaves(state.params)[0], np.float32)))
+    for loss, leaf in outs[1:]:
+        assert loss == pytest.approx(outs[0][0], rel=1e-4)
+        np.testing.assert_allclose(leaf, outs[0][1], rtol=2e-3, atol=2e-5)
+
+
+def test_param_count_ballpark():
+    expect = {
+        "llama3.2-1b": (0.9e9, 1.6e9),
+        "deepseek-coder-33b": (28e9, 38e9),
+        "nemotron-4-340b": (300e9, 380e9),
+        "deepseek-v2-lite-16b": (12e9, 20e9),
+        "qwen2-moe-a2.7b": (11e9, 18e9),
+        "jamba-v0.1-52b": (42e9, 70e9),
+        "rwkv6-3b": (2e9, 4e9),
+        "gemma3-4b": (3e9, 6e9),
+        "hubert-xlarge": (0.8e9, 1.4e9),
+        "qwen2-vl-7b": (6e9, 10e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    # MoE active < total
+    dsv2 = get_config("deepseek-v2-lite-16b")
+    assert dsv2.param_count(active_only=True) < 0.35 * dsv2.param_count()
+
+
+def test_adafactor_trains():
+    cfg = get_config("nemotron-4-340b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    _, opt = make_optimizer("adafactor", lr=1e-2, warmup_steps=1,
+                            use_master=False)
+    step = jax.jit(make_train_step(cfg, opt))
+    state = init_train_state(cfg, params, opt)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 17), 0, cfg.vocab)
+    batch = {"inputs": toks[:, :-1], "labels": toks[:, 1:]}
+    losses = []
+    for _ in range(10):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]

@@ -1,0 +1,69 @@
+"""Property tests for the §3.1.2 competitiveness results.
+
+(1) The T_even policy costs at most 2x the clairvoyant optimum on ANY
+    single-object request sequence (computed analytically, tail included).
+(2) For any fixed-TTL policy an adversarial workload forces the ratio toward
+    2 (we construct the §3.1.2 adversary and check it exceeds 1.5 after a few
+    rounds).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+S = 0.026   # $/GB-month at the cache
+N = 0.02    # $/GB on the edge
+T_EVEN = N / S   # months
+
+
+def policy_cost(gaps, ttl):
+    """Analytic cost/GB of a TTL-with-reset policy on one object: initial
+    remote GET, then per gap either storage (hit) or ttl storage + refetch
+    (miss), plus the trailing ttl of storage after the final access."""
+    c = N
+    for g in gaps:
+        c += g * S if g <= ttl else (ttl * S + N)
+    return c + ttl * S
+
+
+def optimal_cost(gaps):
+    """Clairvoyant: store iff the gap beats the break-even time."""
+    return N + sum(min(g * S, N) for g in gaps)
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.lists(st.floats(min_value=1e-4, max_value=50.0), max_size=40))
+def test_t_even_policy_is_2_competitive(gaps):
+    assert policy_cost(gaps, T_EVEN) <= 2.0 * optimal_cost(gaps) + 1e-12
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(st.floats(min_value=1e-4, max_value=50.0), max_size=30),
+    st.floats(min_value=0.01, max_value=5.0),
+)
+def test_no_policy_beats_optimal(gaps, ttl):
+    assert policy_cost(gaps, ttl) >= optimal_cost(gaps) - 1e-12
+
+
+@pytest.mark.parametrize("ttl", [0.1 * T_EVEN, 0.5 * T_EVEN, T_EVEN,
+                                 2 * T_EVEN, 10 * T_EVEN])
+def test_adversary_forces_near_2x(ttl):
+    """§3.1.2 proof (2): evict late => never ask again; evict early => ask
+    just after eviction.  Any fixed TTL lands near 2x optimal."""
+    if ttl >= T_EVEN:
+        gaps = []                      # never re-read
+        ratio = policy_cost(gaps, ttl) / optimal_cost(gaps)
+        assert ratio >= 1.0 + min(ttl, T_EVEN) * S / N - 1e-9
+    else:
+        eps = 1e-3
+        gaps = [ttl + eps] * 50        # re-read just after each eviction
+        ratio = policy_cost(gaps, ttl) / optimal_cost(gaps)
+        assert ratio > 1.5
+
+
+def test_t_even_exactly_2x_on_worst_case():
+    # never re-read: T_even pays N + T_even*S = 2N; optimal pays N
+    assert policy_cost([], T_EVEN) == pytest.approx(2 * N)
+    assert optimal_cost([]) == pytest.approx(N)

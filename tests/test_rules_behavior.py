@@ -1,0 +1,59 @@
+"""Behavioral tests for the per-cell sharding rule selection (the §Perf
+decisions are encoded here -- these tests pin them down)."""
+
+from repro.configs import get_config, get_shape
+from repro.launch.dryrun import pick_microbatches, rules_for
+
+
+def test_ep_guard_divisibility():
+    """EP over the model axis only when the expert count divides it (C4)."""
+    r_dsv2 = rules_for(get_config("deepseek-v2-lite-16b"),
+                       get_shape("train_4k"), False)
+    assert r_dsv2["experts"] == "model" and r_dsv2["expert_ff"] is None
+    r_qwen = rules_for(get_config("qwen2-moe-a2.7b"),
+                       get_shape("train_4k"), False)   # 60 % 16 != 0
+    assert r_qwen["experts"] is None and r_qwen["expert_ff"] == "model"
+    r_jamba = rules_for(get_config("jamba-v0.1-52b"),
+                        get_shape("train_4k"), False)  # 16 % 16 == 0
+    assert r_jamba["experts"] == "model"
+
+
+def test_attn_q_only_for_unshardeable_heads():
+    """Context-parallel scores only when q heads cannot shard (B-family):
+    forcing it on shardable heads causes involuntary rematerialization."""
+    for arch, expect in [("deepseek-coder-33b", "model"),   # 56 heads
+                         ("gemma3-4b", "model"),            # 8 heads
+                         ("qwen2-vl-7b", "model"),          # 28 heads
+                         ("nemotron-4-340b", None),         # 96 heads: shard
+                         ("llama3.2-1b", None)]:            # 32 heads: shard
+        r = rules_for(get_config(arch), get_shape("train_4k"), False)
+        assert r["attn_q"] == expect, arch
+
+
+def test_decode_cache_sharding_rules():
+    """Decode shards kv_seq over model when heads can't (GQA kv<16, MLA)."""
+    r = rules_for(get_config("llama3.2-1b"), get_shape("decode_32k"), False)
+    assert r["kv_seq"] == "model"            # kv=8
+    r = rules_for(get_config("deepseek-v2-lite-16b"),
+                  get_shape("decode_32k"), False)
+    assert r["kv_seq"] == "model"            # MLA latent cache
+    r = rules_for(get_config("qwen2-moe-a2.7b"), get_shape("decode_32k"), False)
+    assert r["kv_seq"] is None               # kv=16 shards over heads
+
+
+def test_long_context_uses_sequence_parallelism():
+    r = rules_for(get_config("rwkv6-3b"), get_shape("long_500k"), False)
+    assert r["batch"] is None
+    assert r["kv_seq"] == ("data", "model")
+
+
+def test_microbatch_selection():
+    assert pick_microbatches(get_config("nemotron-4-340b"),
+                             get_shape("train_4k"), 16) == 8   # config override
+    assert pick_microbatches(get_config("llama3.2-1b"),
+                             get_shape("train_4k"), 16) == 1
+    assert pick_microbatches(get_config("jamba-v0.1-52b"),
+                             get_shape("train_4k"), 16) == 16
+    # decode/prefill never accumulate
+    assert pick_microbatches(get_config("nemotron-4-340b"),
+                             get_shape("decode_32k"), 16) == 1

@@ -1,0 +1,118 @@
+import numpy as np
+import pytest
+
+from repro.core import paper_2region_catalog, pick_regions
+from repro.core.costmodel import GB, SECONDS_PER_MONTH
+from repro.core.policies import make_policy
+from repro.core.simulator import OP_GET, OP_PUT, Simulator, run_policy
+from repro.core.traces import EVENT_DTYPE, Trace, assign_two_region, generate_trace
+
+DAY = 24 * 3600.0
+
+
+def mk_trace(rows, regions, buckets=("b0",)):
+    ev = np.zeros(len(rows), dtype=EVENT_DTYPE)
+    for i, (t, op, obj, size, region) in enumerate(rows):
+        ev[i] = (t, op, obj, size, region, 0)
+    return Trace("mini", ev, tuple(regions), tuple(buckets))
+
+
+REGS = ("aws:us-east-1", "aws:us-west-1")
+
+
+def test_hand_computed_always_store_costs():
+    """PUT 1 GB at base; GET twice at cache, 10 days apart; trace ends at 20d.
+    AlwaysStore: egress once, cache storage from first GET to trace end."""
+    cat = paper_2region_catalog()
+    tr = mk_trace(
+        [(0.0, OP_PUT, 1, GB, 0),
+         (1 * DAY, OP_GET, 1, GB, 1),
+         (11 * DAY, OP_GET, 1, GB, 1),
+         (20 * DAY, OP_GET, 2, 1, 0)],   # horizon marker (different object)
+        REGS)
+    rep = run_policy(tr, cat, "always_store", mode="FB")
+    assert rep.network == pytest.approx(0.02, rel=1e-6)        # one transfer
+    expect_store = 0.026 * (19 * DAY / SECONDS_PER_MONTH)      # day1 .. day20
+    assert rep.storage == pytest.approx(expect_store, rel=1e-6)
+    assert rep.n_hit == 1 and rep.n_miss == 1
+
+
+def test_always_evict_pays_every_get():
+    cat = paper_2region_catalog()
+    tr = mk_trace(
+        [(0.0, OP_PUT, 1, GB, 0)] +
+        [((1 + i) * DAY, OP_GET, 1, GB, 1) for i in range(5)],
+        REGS)
+    rep = run_policy(tr, cat, "always_evict", mode="FB")
+    assert rep.network == pytest.approx(5 * 0.02, rel=1e-6)
+    assert rep.storage == pytest.approx(0.0, abs=1e-12)        # no cache copy
+    assert rep.storage_base > 0                                 # base persists
+
+
+def test_fb_base_never_evicted_and_reads_recover():
+    cat = paper_2region_catalog()
+    tr = mk_trace(
+        [(0.0, OP_PUT, 1, GB, 0),
+         (100 * DAY, OP_GET, 1, GB, 1)],     # long after any TTL
+        REGS)
+    pol = make_policy("t_even", cat)
+    sim = Simulator(cat, pol, mode="FB")
+    rep = sim.run(tr)
+    assert rep.n_miss == 1       # served from the (never evicted) base
+    assert rep.network > 0
+
+
+def test_fp_sole_copy_survives():
+    cat = paper_2region_catalog()
+    tr = mk_trace(
+        [(0.0, OP_PUT, 1, GB, 0),
+         (200 * DAY, OP_GET, 1, GB, 0)],     # way past TTL, same region
+        REGS)
+    pol = make_policy("t_even", cat)
+    sim = Simulator(cat, pol, mode="FP")
+    rep = sim.run(tr)
+    assert rep.n_hit == 1        # sole copy was not evicted (§3.2.1)
+
+
+def test_overwrite_drops_stale_replicas():
+    cat = paper_2region_catalog()
+    tr = mk_trace(
+        [(0.0, OP_PUT, 1, GB, 0),
+         (1 * DAY, OP_GET, 1, GB, 1),        # replicate to cache
+         (2 * DAY, OP_PUT, 1, GB, 0),        # new version (LWW)
+         (3 * DAY, OP_GET, 1, GB, 1)],       # must MISS (stale copy dropped)
+        REGS)
+    rep = run_policy(tr, cat, "always_store", mode="FB")
+    assert rep.n_miss == 2
+
+
+def test_cgp_beats_or_matches_everyone():
+    cat = paper_2region_catalog()
+    for name in ("T15", "T65"):
+        tr = assign_two_region(generate_trace(name, seed=3, n_objects=80),
+                               *REGS)
+        cgp = run_policy(tr, cat, "cgp", mode="FB").policy_cost
+        for pol in ("always_evict", "always_store", "t_even", "skystore"):
+            cost = run_policy(tr, cat, pol, mode="FB").policy_cost
+            assert cost >= cgp * 0.999, (name, pol)
+
+
+def test_skystore_multiregion_runs_all_workloads():
+    cat = pick_regions(3)
+    base = generate_trace("T15", seed=5, n_objects=60)
+    for kind in "ABCD":
+        tr = Trace.__new__(Trace)
+        from repro.core.traces import assign_workload
+        tr = assign_workload(base, cat.region_names(), kind, seed=1)
+        rep = run_policy(tr, cat, "skystore", mode="FB")
+        assert rep.total > 0
+        assert rep.n_get > 0
+
+
+def test_replicate_on_write_policies_pay_upfront():
+    cat = pick_regions(3)
+    tr = mk_trace([(0.0, OP_PUT, 1, GB, 0), (DAY, OP_GET, 1, GB, 1)],
+                  cat.region_names())
+    rep = run_policy(tr, cat, "juicefs", mode="FB")
+    assert rep.n_replications >= 2           # pushed to both other regions
+    assert rep.n_hit == 1                    # read is local afterwards

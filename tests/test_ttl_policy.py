@@ -1,0 +1,98 @@
+import numpy as np
+import pytest
+
+from repro.core.costmodel import GB, SECONDS_PER_MONTH, paper_2region_catalog
+from repro.core.histogram import AccessHistogram
+from repro.core.ttl_policy import (
+    choose_ttl, choose_ttl_with_perf_value, expected_cost_curve,
+)
+
+S_PRICE = 0.026       # $/GB/month
+N_PRICE = 0.02        # $/GB
+T_EVEN = N_PRICE / S_PRICE * SECONDS_PER_MONTH
+
+DAY = 24 * 3600.0
+
+
+def _hist(gaps, sizes, last_ages=(), last_sizes=()):
+    h = AccessHistogram.empty()
+    if len(gaps):
+        h.add_gaps(np.asarray(gaps, float), np.asarray(sizes, float))
+    if len(last_ages):
+        h.add_last(np.asarray(last_ages, float), np.asarray(last_sizes, float))
+    return h
+
+
+def test_cost_curve_matches_brute_force():
+    h = _hist([5.0, 120.0, 9000.0, 3 * DAY], [GB] * 4, [2 * DAY], [GB])
+    ttls, cost = expected_cost_curve(h, S_PRICE, N_PRICE)
+    s = S_PRICE / GB / SECONDS_PER_MONTH
+    n = N_PRICE / GB
+
+    def brute(ttl):
+        c = 0.0
+        edges, hist, t_hat, last = h.as_arrays()
+        lower = np.concatenate([[0.0], edges[:-1]])
+        mid = 0.5 * (lower + edges)
+        for j in range(len(edges)):
+            if hist[j] == 0 and last[j] == 0:
+                continue
+            if edges[j] <= ttl:
+                c += hist[j] * t_hat[j] * s
+                c += last[j] * mid[j] * s        # censored pause
+            else:
+                c += hist[j] * (n + ttl * s)
+                c += last[j] * ttl * s
+        return c
+
+    for k in [0, 1, 60, 300, 700, len(ttls) - 1]:
+        assert cost[k] == pytest.approx(brute(ttls[k]), rel=1e-6), k
+
+
+def test_hot_workload_prefers_keeping():
+    # gaps of one hour, all re-read: optimal TTL comfortably above 1 h
+    h = _hist([3600.0] * 50, [GB] * 50)
+    ttl = choose_ttl(h, S_PRICE, N_PRICE)
+    assert ttl >= 3600.0
+    assert ttl < T_EVEN * 1.05
+
+
+def test_one_hit_workload_prefers_evicting():
+    # nothing is ever re-read: optimal TTL is 0
+    h = _hist([], [], last_ages=[DAY] * 20, last_sizes=[GB] * 20)
+    h.add_first_read(20 * GB, remote=True)
+    assert choose_ttl(h, S_PRICE, N_PRICE) == 0.0
+
+
+def test_tail_term_prevents_runaway():
+    # mixed workload: some re-reads + many one-hits.  A sane estimator must
+    # not pick TTLs beyond the observation window to dodge the tail term.
+    h = _hist([DAY] * 5, [GB] * 5, last_ages=[10 * DAY] * 40, last_sizes=[GB] * 40)
+    ttl = choose_ttl(h, S_PRICE, N_PRICE)
+    assert DAY * 0.5 <= ttl <= 3 * DAY
+
+
+def test_expensive_network_raises_ttl():
+    h = _hist([DAY, 10 * DAY, 20 * DAY], [GB] * 3,
+              last_ages=[5 * DAY], last_sizes=[GB])
+    cheap = choose_ttl(h, S_PRICE, 0.002)
+    costly = choose_ttl(h, S_PRICE, 0.2)
+    assert costly >= cheap
+
+
+def test_perf_value_extends_ttl_monotonically():
+    h = _hist([DAY] * 3 + [20 * DAY] * 3, [GB] * 6,
+              last_ages=[5 * DAY] * 5, last_sizes=[GB] * 5)
+    base = choose_ttl(h, S_PRICE, N_PRICE)
+    t1 = choose_ttl_with_perf_value(h, S_PRICE, N_PRICE, 0.001)
+    t2 = choose_ttl_with_perf_value(h, S_PRICE, N_PRICE, 1.0)
+    assert base <= t1 <= t2
+
+
+def test_paper_6_7_4_worked_example():
+    """§6.7.4: extending TTL 0.77 -> 1.0 months costs $0.006/GB extra storage;
+    a user performance value of $0.005/GB must NOT justify it."""
+    extra_months = 1.0 - 0.02 / 0.026
+    extra_cost = extra_months * 0.026
+    assert extra_cost == pytest.approx(0.006, abs=5e-4)
+    assert extra_cost > 0.005
