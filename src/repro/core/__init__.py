@@ -1,6 +1,9 @@
 """SkyStore core: the paper's contribution (placement + adaptive TTL eviction).
 
 Public surface:
+  api            -- the unified typed op layer (ObjectStoreAPI) every data
+                    plane implements: VirtualStore, S3Proxy wire codec, and
+                    the Simulator all speak the same request objects
   costmodel      -- region catalogs, egress matrices, T_even
   histogram      -- 800-cell variable-granularity access histograms
   ttl_policy     -- ExpectedCost(TTL), argmin scan, adaptive controller
@@ -12,6 +15,30 @@ Public surface:
   backends       -- physical per-region stores (memory / filesystem)
 """
 
+from .api import (  # noqa: F401
+    ApiError,
+    CompleteMultipartRequest,
+    CopyRequest,
+    CreateBucketRequest,
+    CreateMultipartRequest,
+    DeleteBucketRequest,
+    DeleteObjectRequest,
+    DeleteObjectsRequest,
+    GetRequest,
+    GetResponse,
+    HeadRequest,
+    HeadResponse,
+    ListBucketsRequest,
+    ListRequest,
+    ListResponse,
+    ObjectStoreAPI,
+    ObjectSummary,
+    PutRequest,
+    PutResponse,
+    UploadPartRequest,
+    choose_get_source,
+    resolve_put_placement,
+)
 from .costmodel import (  # noqa: F401
     CostModel,
     Region,

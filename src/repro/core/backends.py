@@ -35,7 +35,10 @@ class Backend:
     def put(self, bucket: str, key: str, data: bytes) -> HeadResult:
         raise NotImplementedError
 
-    def get(self, bucket: str, key: str) -> bytes:
+    def get(self, bucket: str, key: str,
+            byte_range: Optional[Tuple[int, int]] = None) -> bytes:
+        """Read an object, or -- with ``byte_range=(start, end)`` inclusive --
+        just that slice (the S3 ranged-GET primitive)."""
         raise NotImplementedError
 
     def head(self, bucket: str, key: str) -> HeadResult:
@@ -73,11 +76,15 @@ class InMemoryBackend(Backend):
         self._data[(bucket, key)] = (bytes(data), h)
         return h
 
-    def get(self, bucket, key):
+    def get(self, bucket, key, byte_range=None):
         try:
-            return self._data[(bucket, key)][0]
+            data = self._data[(bucket, key)][0]
         except KeyError:
             raise KeyError(f"{self.region}: {bucket}/{key} not found") from None
+        if byte_range is not None:
+            start, end = byte_range
+            return data[start:end + 1]
+        return data
 
     def head(self, bucket, key):
         try:
@@ -119,11 +126,15 @@ class FSBackend(Backend):
         os.replace(tmp, p)            # atomic within the region
         return HeadResult(key, len(data), _etag(data), time.time())
 
-    def get(self, bucket, key):
+    def get(self, bucket, key, byte_range=None):
         p = self._path(bucket, key)
         if not os.path.exists(p):
             raise KeyError(f"{self.region}: {bucket}/{key} not found")
         with open(p, "rb") as f:
+            if byte_range is not None:
+                start, end = byte_range
+                f.seek(start)
+                return f.read(end - start + 1)
             return f.read()
 
     def head(self, bucket, key):

@@ -24,6 +24,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from .api import ApiError, choose_get_source, resolve_put_placement
 from .costmodel import CostModel
 from .ttl_policy import AdaptiveTTLController
 
@@ -109,9 +110,11 @@ class MetadataServer:
         return sorted(self.buckets)
 
     def delete_bucket(self, bucket: str) -> None:
+        if bucket not in self.buckets:
+            raise ApiError("NoSuchBucket", f"no such bucket {bucket!r}")
         if any(b == bucket for (b, _k) in self.objects):
-            raise ValueError(f"bucket {bucket!r} not empty")
-        self.buckets.pop(bucket, None)
+            raise ApiError("BucketNotEmpty", f"bucket {bucket!r} not empty")
+        del self.buckets[bucket]
 
     # -- 2PC writes ---------------------------------------------------------------
     def begin_upload(
@@ -120,7 +123,7 @@ class MetadataServer:
         """Phase 1: log the intent; returns the version this upload will commit."""
         now = time.time() if now is None else now
         if bucket not in self.buckets:
-            raise KeyError(f"no such bucket {bucket!r}")
+            raise ApiError("NoSuchBucket", f"no such bucket {bucket!r}")
         om = self.objects.get((bucket, key))
         if om is None:
             om = ObjectMeta(bucket, key, None, [])
@@ -140,11 +143,12 @@ class MetadataServer:
         """Phase 2: commit -- only now does the object become visible (§4.5)."""
         now = time.time() if now is None else now
         if (bucket, key, region, version) not in self._pending:
-            raise KeyError("complete_upload without matching begin_upload")
+            raise ApiError("NoSuchUpload",
+                           "complete_upload without matching begin_upload")
         del self._pending[(bucket, key, region, version)]
         om = self.objects[(bucket, key)]
-        if om.base_region is None:
-            om.base_region = region          # write-local fixes the FB base
+        placement = resolve_put_placement(self.mode, om.base_region, region)
+        om.base_region = placement.base_region   # write-local fixes the FB base
         vm = next((v for v in om.versions if v.version == version), None)
         if vm is None:
             vm = VersionMeta(version, size, etag, now, {})
@@ -152,7 +156,7 @@ class MetadataServer:
             om.versions.sort(key=lambda v: v.version)
             if not self.versioning and len(om.versions) > 1:
                 om.versions = om.versions[-1:]       # last-writer-wins
-        pinned = self.mode == "FB" and region == om.base_region
+        pinned = placement.pinned
         vm.replicas[region] = ReplicaMeta(
             region, COMMITTED, now, now, float("inf"), pinned, etag, size
         )
@@ -186,19 +190,21 @@ class MetadataServer:
         now = time.time() if now is None else now
         om = self.objects.get((bucket, key))
         if om is None or not om.versions:
-            raise KeyError(f"{bucket}/{key} not found")
-        vm = (om.latest if version is None
-              else next(v for v in om.versions if v.version == version))
-        alive = {
-            r: m for r, m in vm.replicas.items()
-            if m.status == COMMITTED and (m.pinned or m.expire > now)
+            raise ApiError("NoSuchKey", f"{bucket}/{key} not found")
+        if version is None:
+            vm = om.latest
+        else:
+            vm = next((v for v in om.versions if v.version == version), None)
+            if vm is None:
+                raise ApiError("NoSuchVersion",
+                               f"{bucket}/{key} has no version {version}")
+        committed = {
+            r: (float("inf") if m.pinned else m.expire)
+            for r, m in vm.replicas.items() if m.status == COMMITTED
         }
-        if not alive:
-            alive = {r: m for r, m in vm.replicas.items() if m.status == COMMITTED}
-        if not alive:
-            raise KeyError(f"{bucket}/{key} has no committed replica")
-        hit = region in alive
-        src = region if hit else self.cost.cheapest_source(alive, region)
+        if not committed:
+            raise ApiError("NoSuchKey", f"{bucket}/{key} has no committed replica")
+        src, hit = choose_get_source(committed, region, now, self.cost)
         return vm, src, hit
 
     def record_get(
@@ -228,7 +234,7 @@ class MetadataServer:
             if m.status == COMMITTED
         }
         ttl = self._object_ttl(bucket, region, holders, now)
-        pinned = self.mode == "FB" and region == om.base_region
+        pinned = resolve_put_placement(self.mode, om.base_region, region).pinned
         rm = ReplicaMeta(region, COMMITTED, now, now, ttl, pinned, etag, size)
         vm.replicas[region] = rm
         return rm
@@ -300,7 +306,7 @@ class MetadataServer:
     def head_object(self, bucket: str, key: str) -> ObjectMeta:
         om = self.objects.get((bucket, key))
         if om is None:
-            raise KeyError(f"{bucket}/{key} not found")
+            raise ApiError("NoSuchKey", f"{bucket}/{key} not found")
         return om
 
     # -- fault tolerance (§4.5) ------------------------------------------------------
@@ -352,6 +358,8 @@ class MetadataServer:
         for region, be in backends.items():
             for bucket in self.buckets:
                 for h in be.list(bucket):
+                    if h.key.startswith("__skystore_"):
+                        continue        # internal blobs (meta backups, MPU parts)
                     om = self.objects.get((bucket, h.key))
                     if om is None:
                         om = ObjectMeta(bucket, h.key, region, [])

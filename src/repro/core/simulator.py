@@ -1,6 +1,13 @@
 """Event-driven monetary-cost simulator (paper §5 "1.9k lines of Python to
 estimate the total cost of each of these policies across traces").
 
+Trace replay drives the *same* typed request objects
+(:class:`~repro.core.api.PutRequest` / ``GetRequest`` / ``DeleteObjectRequest``)
+as the live :class:`~repro.core.virtual_store.VirtualStore`, through the same
+``dispatch(op)`` entry point, and GET routing / PUT base-pinning come from the
+shared helpers in :mod:`repro.core.api` -- so the cost model cannot silently
+diverge from serving semantics.
+
 The simulator owns the mechanics every policy shares:
 
   * write-local PUTs (optionally sync-replicated to the FB base on cross-region
@@ -27,6 +34,15 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .api import (
+    ApiError,
+    DeleteObjectRequest,
+    GetRequest,
+    PutRequest,
+    Request,
+    choose_get_source,
+    resolve_put_placement,
+)
 from .costmodel import CostModel
 from .policies import GetContext, Oracle, Policy, SPANStore
 
@@ -208,8 +224,20 @@ class Simulator:
             for r, rep in obj.replicas.items()
         }
 
+    # -- the unified op entry point (ObjectStoreAPI over trace events) ------------
+    def dispatch(self, op: Request):
+        """Consume the same typed request objects as the live store.  Event
+        time comes from ``op.at`` (trace replay is clocked externally)."""
+        handler = self._HANDLERS.get(type(op))
+        if handler is None:
+            raise ApiError("InvalidRequest",
+                           f"simulator does not model {type(op).__name__}")
+        return getattr(self, handler)(op)
+
     # -- event handlers ------------------------------------------------------------
-    def _on_put(self, now: float, oid: int, size: float, region: str, bucket: str):
+    def _handle_put(self, op: PutRequest):
+        now, oid = float(op.at), int(op.key)
+        size, region, bucket = float(op.nbytes), op.region, op.bucket
         self.report.n_put += 1
         self._charge_op(region, "PUT")
         obj = self.objects.get(oid)
@@ -223,11 +251,11 @@ class Simulator:
         obj.size, obj.version = size, obj.version + 1
 
         if self.mode == "FB":
-            if obj.base_region is None:
-                obj.base_region = region           # §2.3: base = initial write location
+            placement = resolve_put_placement("FB", obj.base_region, region)
+            obj.base_region = placement.base_region   # §2.3: first write wins
             self._add_replica(oid, obj, region, now, INF,
-                              pinned=(region == obj.base_region))
-            if region != obj.base_region:
+                              pinned=placement.pinned)
+            if placement.sync_to_base:
                 # Sync replication to base keeps the pinned copy fresh (§4.4).
                 self._charge_transfer(region, obj.base_region, size)
                 self._charge_op(obj.base_region, "PUT")
@@ -257,15 +285,17 @@ class Simulator:
                 self.cost.get_latency_ms(region, region, size) * 2.0
             )
 
-    def _on_get(self, now: float, oid: int, region: str, bucket: str):
+    def _handle_get(self, op: GetRequest):
+        now, oid = float(op.at), int(op.key)
+        region, bucket = op.region, op.bucket
         obj = self.objects.get(oid)
         if obj is None or not obj.replicas:
             return
         self.report.n_get += 1
         self._charge_op(region, "GET")
         size = obj.size
-        hit = region in obj.replicas
-        src = region if hit else self.cost.cheapest_source(obj.replicas, region)
+        # Same §2.3 routing rule the metadata server uses for live GETs.
+        src, hit = choose_get_source(self.holders(obj), region, now, self.cost)
         gap_key = (oid, region)
         prev = self._last_get.get(gap_key)
         gap = (now - prev) if prev is not None else None
@@ -297,7 +327,8 @@ class Simulator:
         if self.track_latency:
             self.report.get_latency_ms.append(self.cost.get_latency_ms(src, region, size))
 
-    def _on_delete(self, now: float, oid: int):
+    def _handle_delete(self, op: DeleteObjectRequest):
+        now, oid = float(op.at), int(op.key)
         obj = self.objects.pop(oid, None)
         if obj is None:
             return
@@ -308,9 +339,9 @@ class Simulator:
 
     # -- main loop -------------------------------------------------------------------
     def run(self, trace) -> CostReport:
-        """``trace`` is a :class:`repro.core.traces.Trace`."""
+        """``trace`` is a :class:`repro.core.traces.Trace`; its events replay
+        as :mod:`repro.core.api` request objects through :meth:`dispatch`."""
         ev = trace.events
-        regions, buckets = trace.regions, trace.buckets
         self._horizon = float(ev["t"][-1]) if len(ev) else 0.0
         self.policy.reset()
         if self.policy.requires_oracle:
@@ -321,8 +352,8 @@ class Simulator:
 
         next_tick = self.scan_interval
         epoch_idx = -1
-        for i in range(len(ev)):
-            t = float(ev["t"][i])
+        for req in trace.iter_requests():
+            t = float(req.at)
             while next_tick <= t:
                 self._process_expirations(next_tick)
                 self.policy.periodic(next_tick, self)
@@ -335,22 +366,19 @@ class Simulator:
                     self.policy.solve_epoch(gets, puts)
                     self._apply_spanstore_sets(t)
             self._process_expirations(t)
-            op = int(ev["op"][i])
-            oid = int(ev["obj"][i])
-            region = regions[int(ev["region"][i])]
-            bucket = buckets[int(ev["bucket"][i])]
-            if op == OP_PUT:
-                self._on_put(t, oid, float(ev["size"][i]), region, bucket)
-            elif op == OP_GET:
-                self._on_get(t, oid, region, bucket)
-            else:
-                self._on_delete(t, oid)
+            self.dispatch(req)
 
         self._process_expirations(self._horizon)
         for oid, obj in self.objects.items():
             for rep in obj.replicas.values():
                 self._charge_storage(obj, rep, min(rep.expire, self._horizon))
         return self.report
+
+    _HANDLERS = {
+        PutRequest: "_handle_put",
+        GetRequest: "_handle_get",
+        DeleteObjectRequest: "_handle_delete",
+    }
 
     def _apply_spanstore_sets(self, now: float) -> None:
         """Epoch boundary: drop replicas outside the new solver sets (FP, >=1)."""

@@ -35,10 +35,11 @@ cache region.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Iterator, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .api import DeleteObjectRequest, GetRequest, PutRequest
 from .simulator import OP_DELETE, OP_GET, OP_PUT
 
 DAY = 24 * 3600.0
@@ -66,6 +67,28 @@ class Trace:
     @property
     def duration(self) -> float:
         return float(self.events["t"][-1]) if len(self.events) else 0.0
+
+    def iter_requests(
+        self,
+    ) -> Iterator[Union[PutRequest, GetRequest, DeleteObjectRequest]]:
+        """Replay the trace as the typed :mod:`repro.core.api` request
+        objects every :class:`~repro.core.api.ObjectStoreAPI` implementation
+        consumes -- the simulator and the live store share one op language.
+        Object ids become string keys; event time rides in ``at``."""
+        ev = self.events
+        for i in range(len(ev)):
+            t = float(ev["t"][i])
+            op = int(ev["op"][i])
+            key = str(int(ev["obj"][i]))
+            region = self.regions[int(ev["region"][i])]
+            bucket = self.buckets[int(ev["bucket"][i])]
+            if op == OP_PUT:
+                yield PutRequest(bucket, key, region,
+                                 size=int(ev["size"][i]), at=t)
+            elif op == OP_GET:
+                yield GetRequest(bucket, key, region, at=t)
+            else:
+                yield DeleteObjectRequest(bucket, key, region, at=t)
 
     def stats(self) -> Dict[str, float]:
         ev = self.events

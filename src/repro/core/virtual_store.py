@@ -1,15 +1,25 @@
 """The client-facing virtual object store (paper §4.1 + §4.3).
 
-:class:`VirtualStore` plays the role of the S3-Proxy: it exposes virtual
+:class:`VirtualStore` implements :class:`~repro.core.api.ObjectStoreAPI` --
+the unified typed op layer -- for live serving.  It exposes virtual
 buckets/objects that "appear global to the user", consults the metadata server
 for routing, moves the actual bytes between physical backends, and implements
 the paper's placement policy mechanics:
 
   * PUT  -> write-local + 2PC commit (§2.3, §4.5);
   * GET  -> cheapest committed replica; on a remote read, replicate-on-read
-    with the adaptive TTL (§2.3, §3);
-  * DELETE / HEAD / LIST / COPY / multipart upload -- the 14-op S3 surface the
+    with the adaptive TTL (§2.3, §3); ranged and conditional variants serve
+    from the same path;
+  * DELETE / HEAD / LIST / COPY / multipart upload -- the full S3 surface the
     paper supports, minus auth plumbing.
+
+Every op arrives as a typed request object through :meth:`dispatch`; the
+legacy keyword methods (``put_object`` et al.) are thin wrappers kept for
+existing callers (training framework, benchmarks, examples).
+
+Multipart uploads spill their parts into the local-region *backend* under
+``__skystore_mpu__/`` instead of buffering them in proxy RAM, so an upload's
+working set is bounded by one part, not the whole object.
 
 This is the layer the training framework mounts: checkpoints and data shards
 are virtual objects, so multi-region fault tolerance falls out of the paper's
@@ -23,9 +33,49 @@ import hashlib
 import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from .api import (
+    Ack,
+    AbortMultipartRequest,
+    ApiError,
+    CompleteMultipartRequest,
+    CompleteMultipartResponse,
+    CopyRequest,
+    CopyResponse,
+    CreateBucketRequest,
+    CreateMultipartRequest,
+    CreateMultipartResponse,
+    DeleteBucketRequest,
+    DeleteObjectRequest,
+    DeleteObjectsRequest,
+    DeleteObjectsResponse,
+    GetRequest,
+    GetResponse,
+    HeadRequest,
+    HeadResponse,
+    ListBucketsRequest,
+    ListBucketsResponse,
+    ListRequest,
+    ListResponse,
+    ObjectSummary,
+    PutRequest,
+    PutResponse,
+    Request,
+    UploadPartRequest,
+    UploadPartResponse,
+    check_preconditions,
+    decode_continuation_token,
+    encode_continuation_token,
+    resolve_range,
+)
 from .backends import Backend, HeadResult
 from .costmodel import CostModel
 from .metadata import COMMITTED, MetadataServer
+
+#: Key prefix for internal blobs (multipart spill space, metadata backups).
+MPU_PREFIX = "__skystore_mpu__/"
+
+#: Hard cap ListObjectsV2 shares with S3.
+MAX_LIST_KEYS = 1000
 
 
 @dataclasses.dataclass
@@ -42,7 +92,19 @@ class TransferLog:
         self.dollars += cost.transfer_cost(src, dst, nbytes)
 
 
+@dataclasses.dataclass
+class _MultipartUpload:
+    bucket: str
+    key: str
+    region: str
+    parts: Dict[int, Tuple[str, int]] = dataclasses.field(default_factory=dict)
+    # part_number -> (etag, size); bytes live in the region backend, not here
+
+
 class VirtualStore:
+    """Implements :class:`~repro.core.api.ObjectStoreAPI` over physical
+    backends + the metadata control plane."""
+
     def __init__(
         self,
         cost: CostModel,
@@ -59,92 +121,319 @@ class VirtualStore:
         self.meta = meta or MetadataServer(cost, mode=mode)
         self.transfers = TransferLog()
         self._clock = clock or time.time
-        self._mpu: Dict[str, Dict[int, bytes]] = {}
+        self._mpu: Dict[str, _MultipartUpload] = {}
+
+    # -- the unified op entry point ------------------------------------------
+    def dispatch(self, op: Request):
+        handler = self._HANDLERS.get(type(op))
+        if handler is None:
+            raise ApiError("InvalidRequest", f"unsupported op {type(op).__name__}")
+        return getattr(self, handler)(op)
+
+    def _now(self, op) -> float:
+        return op.at if op.at is not None else self._clock()
 
     # -- bucket ops -----------------------------------------------------------
-    def create_bucket(self, bucket: str) -> None:
-        self.meta.create_bucket(bucket)
+    def _handle_create_bucket(self, op: CreateBucketRequest) -> Ack:
+        self.meta.create_bucket(op.bucket)
+        return Ack()
 
-    def list_buckets(self) -> List[str]:
-        return self.meta.list_buckets()
+    def _handle_delete_bucket(self, op: DeleteBucketRequest) -> Ack:
+        self.meta.delete_bucket(op.bucket)
+        # reclaim any in-flight multipart spill space in this bucket
+        for uid in [u for u, m in self._mpu.items() if m.bucket == op.bucket]:
+            self._discard_mpu(uid)
+        return Ack()
 
-    def delete_bucket(self, bucket: str) -> None:
-        self.meta.delete_bucket(bucket)
+    def _handle_list_buckets(self, op: ListBucketsRequest) -> ListBucketsResponse:
+        return ListBucketsResponse(self.meta.list_buckets())
 
-    # -- object ops --------------------------------------------------------------
-    def put_object(self, bucket: str, key: str, data: bytes, region: str) -> int:
+    # -- object ops -----------------------------------------------------------
+    def _handle_put(self, op: PutRequest) -> PutResponse:
         """Write-local PUT with the two-phase commit of §4.5."""
-        now = self._clock()
-        version = self.meta.begin_upload(bucket, key, region, len(data), now)
-        h = self.backends[region].put(bucket, self._pkey(key, version), data)
-        self.meta.complete_upload(bucket, key, region, version, len(data),
-                                  h.etag, now)
-        return version
+        if op.body is None:
+            raise ApiError("InvalidRequest", "PUT outside simulation needs a body")
+        now = self._now(op)
+        data = op.body
+        version = self.meta.begin_upload(op.bucket, op.key, op.region,
+                                         len(data), now)
+        h = self.backends[op.region].put(op.bucket,
+                                         self._pkey(op.key, version), data)
+        self.meta.complete_upload(op.bucket, op.key, op.region, version,
+                                  len(data), h.etag, now)
+        return PutResponse(version, h.etag)
 
-    def get_object(self, bucket: str, key: str, region: str,
-                   version: Optional[int] = None) -> bytes:
-        """Cheapest-source GET + replicate-on-read (§2.3).
+    def _handle_get(self, op: GetRequest) -> GetResponse:
+        """Cheapest-source GET + replicate-on-read (§2.3), with ranged and
+        conditional variants.
 
         Read-repair (§4.5): if the chosen replica's physical bytes are gone
         (region outage), the stale replica is dropped from metadata and the
         read retries against the surviving copies."""
-        now = self._clock()
+        now = self._now(op)
+        body = full = None
         for _attempt in range(len(self.backends) + 1):
-            vm, src, hit = self.meta.locate(bucket, key, region, now, version)
+            vm, src, hit = self.meta.locate(op.bucket, op.key, op.region, now,
+                                            op.version)
+            check_preconditions(vm.etag, op.if_match, op.if_none_match)
+            rng = resolve_range(op.range_, vm.size)
             try:
-                data = self.backends[src].get(bucket, self._pkey(key, vm.version))
+                if hit and rng is not None:
+                    # local ranged read: only the slice leaves the backend
+                    body = self.backends[src].get(
+                        op.bucket, self._pkey(op.key, vm.version), rng)
+                else:
+                    full = self.backends[src].get(
+                        op.bucket, self._pkey(op.key, vm.version))
                 break
             except KeyError:
                 vm.replicas.pop(src, None)       # physical bytes lost
                 if not vm.replicas:
                     raise
-        self.meta.record_get(bucket, key, region, vm.size, hit, now)
+        self.meta.record_get(op.bucket, op.key, op.region, vm.size, hit, now)
         if hit:
-            self.meta.touch_replica(bucket, key, region, now)
+            self.meta.touch_replica(op.bucket, op.key, op.region, now)
         else:
-            self.transfers.add(self.cost, src, region, len(data))
-            h = self.backends[region].put(bucket, self._pkey(key, vm.version), data)
-            self.meta.commit_replica(bucket, key, region, vm.size, h.etag, now)
-        return data
+            # replicate-on-read always copies the whole object (a ranged miss
+            # still seeds a full local replica), so egress is the full size
+            self.transfers.add(self.cost, src, op.region, vm.size)
+            h = self.backends[op.region].put(
+                op.bucket, self._pkey(op.key, vm.version), full)
+            self.meta.commit_replica(op.bucket, op.key, op.region, vm.size,
+                                     h.etag, now)
+        if body is None:
+            body = full if rng is None else full[rng[0]:rng[1] + 1]
+        return GetResponse(
+            body=body, etag=vm.etag, size=vm.size,
+            last_modified=vm.last_modified, version=vm.version,
+            content_range=(rng[0], rng[1], vm.size) if rng is not None else None,
+            source_region=src, hit=hit,
+        )
+
+    def _handle_head(self, op: HeadRequest) -> HeadResponse:
+        om = self.meta.head_object(op.bucket, op.key)
+        vm = om.latest
+        if vm is None:
+            raise ApiError("NoSuchKey", f"{op.bucket}/{op.key} not found")
+        check_preconditions(vm.etag, op.if_match, op.if_none_match)
+        return HeadResponse(op.key, vm.size, vm.etag, vm.last_modified,
+                            vm.version)
+
+    def _handle_list(self, op: ListRequest) -> ListResponse:
+        """Paginated ListObjectsV2 with delimiter roll-up, straight off the
+        metadata table (no per-key HEAD round trips)."""
+        if op.bucket not in self.meta.buckets:
+            raise ApiError("NoSuchBucket", f"no such bucket {op.bucket!r}")
+        start_after = (decode_continuation_token(op.continuation_token)
+                       if op.continuation_token else "")
+        max_keys = max(0, min(op.max_keys, MAX_LIST_KEYS))
+        contents: List[ObjectSummary] = []
+        prefixes: List[str] = []
+        seen_prefixes = set()
+        truncated = False
+        last_item = ""
+        for om in self.meta.list_objects(op.bucket, op.prefix):
+            vm = om.latest
+            if vm is None:
+                continue             # 2PC in flight: not visible yet (§4.5)
+            # Derive the listing entry: a rolled-up common prefix or the key.
+            entry_key = None
+            if op.delimiter:
+                rest = om.key[len(op.prefix):]
+                i = rest.find(op.delimiter)
+                if i >= 0:
+                    entry_key = op.prefix + rest[:i + len(op.delimiter)]
+            name = entry_key or om.key
+            if start_after and name <= start_after:
+                continue
+            if entry_key is not None and entry_key in seen_prefixes:
+                continue
+            if len(contents) + len(prefixes) >= max_keys:
+                truncated = max_keys > 0
+                break
+            if entry_key is not None:
+                seen_prefixes.add(entry_key)
+                prefixes.append(entry_key)
+            else:
+                contents.append(ObjectSummary(om.key, vm.size, vm.etag,
+                                              vm.last_modified))
+            last_item = name
+        token = encode_continuation_token(last_item) if truncated else None
+        return ListResponse(contents, prefixes, truncated, token)
+
+    def _handle_delete_object(self, op: DeleteObjectRequest) -> Ack:
+        if (op.bucket, op.key) not in self.meta.objects:
+            raise ApiError("NoSuchKey", f"{op.bucket}/{op.key} not found")
+        for region, version in self.meta.delete_object(op.bucket, op.key):
+            self.backends[region].delete(op.bucket, self._pkey(op.key, version))
+        return Ack()
+
+    def _handle_delete_objects(self, op: DeleteObjectsRequest) -> DeleteObjectsResponse:
+        deleted: List[str] = []
+        errors: List[Tuple[str, str]] = []
+        for key in op.keys:
+            try:
+                self._handle_delete_object(
+                    DeleteObjectRequest(op.bucket, key, op.region, op.at))
+                deleted.append(key)
+            except ApiError as e:
+                if e.code == "NoSuchKey":
+                    deleted.append(key)      # batch delete is idempotent (S3)
+                else:
+                    errors.append((key, e.code))
+        return DeleteObjectsResponse(deleted, errors)
+
+    def _handle_copy(self, op: CopyRequest) -> CopyResponse:
+        """COPY short-circuit: if a committed replica of the source already
+        sits in the destination region -- even one whose TTL has lapsed but
+        that the eviction scan has not yet collected -- read it locally
+        instead of paying the replicate-on-read transfer."""
+        now = self._now(op)
+        om = self.meta.head_object(op.bucket, op.src_key)
+        vm = om.latest
+        if vm is None:
+            raise ApiError("NoSuchKey", f"{op.bucket}/{op.src_key} not found")
+        local = vm.replicas.get(op.region)
+        data = None
+        if local is not None and local.status == COMMITTED:
+            try:
+                data = self.backends[op.region].get(
+                    op.bucket, self._pkey(op.src_key, vm.version))
+                self.meta.touch_replica(op.bucket, op.src_key, op.region, now)
+            except KeyError:
+                vm.replicas.pop(op.region, None)   # read-repair (§4.5)
+        if data is None:
+            data = self._handle_get(
+                GetRequest(op.bucket, op.src_key, op.region, at=op.at)).body
+        put = self._handle_put(
+            PutRequest(op.bucket, op.dst_key, op.region, body=data, at=op.at))
+        return CopyResponse(put.version, put.etag)
+
+    # -- multipart upload ------------------------------------------------------
+    def _part_key(self, upload_id: str, part_number: int) -> str:
+        return f"{MPU_PREFIX}{upload_id}/{part_number:05d}"
+
+    def _handle_create_mpu(self, op: CreateMultipartRequest) -> CreateMultipartResponse:
+        if op.bucket not in self.meta.buckets:
+            raise ApiError("NoSuchBucket", f"no such bucket {op.bucket!r}")
+        uid = hashlib.md5(
+            f"{op.bucket}/{op.key}/{op.region}/{self._now(op)}".encode()
+        ).hexdigest()
+        self._mpu[uid] = _MultipartUpload(op.bucket, op.key, op.region)
+        return CreateMultipartResponse(uid)
+
+    def _handle_upload_part(self, op: UploadPartRequest) -> UploadPartResponse:
+        mpu = self._mpu.get(op.upload_id)
+        if mpu is None:
+            raise ApiError("NoSuchUpload", f"no upload {op.upload_id!r}")
+        if op.part_number < 1:
+            raise ApiError("InvalidPart",
+                           f"part numbers start at 1, got {op.part_number}")
+        # Spill to the local-region backend: proxy RAM holds one part at most.
+        h = self.backends[mpu.region].put(
+            mpu.bucket, self._part_key(op.upload_id, op.part_number), op.body)
+        mpu.parts[op.part_number] = (h.etag, len(op.body))
+        return UploadPartResponse(h.etag)
+
+    def _handle_complete_mpu(self, op: CompleteMultipartRequest) -> CompleteMultipartResponse:
+        mpu = self._mpu.get(op.upload_id)
+        if mpu is None or (mpu.bucket, mpu.key) != (op.bucket, op.key):
+            raise ApiError("NoSuchUpload", f"no upload {op.upload_id!r} for "
+                                           f"{op.bucket}/{op.key}")
+        if op.parts is None:
+            listed = [(n, mpu.parts[n][0]) for n in sorted(mpu.parts)]
+        else:
+            listed = [(int(n), e) for n, e in op.parts]
+        if not listed:
+            raise ApiError("InvalidPart", "empty part list")
+        numbers = [n for n, _e in listed]
+        if numbers != sorted(set(numbers)):
+            raise ApiError("InvalidPartOrder",
+                           "part numbers must be unique and ascending")
+        for n, etag in listed:
+            have = mpu.parts.get(n)
+            if have is None:
+                raise ApiError("InvalidPart", f"part {n} was never uploaded")
+            if etag and etag.strip('"') != have[0]:
+                raise ApiError("InvalidPart", f"part {n} ETag mismatch")
+        blob = b"".join(
+            self.backends[mpu.region].get(mpu.bucket,
+                                          self._part_key(op.upload_id, n))
+            for n, _e in listed
+        )
+        put = self._handle_put(PutRequest(op.bucket, op.key, mpu.region,
+                                          body=blob, at=op.at))
+        self._discard_mpu(op.upload_id)
+        return CompleteMultipartResponse(put.version, put.etag, len(blob))
+
+    def _handle_abort_mpu(self, op: AbortMultipartRequest) -> Ack:
+        self._discard_mpu(op.upload_id)
+        return Ack()
+
+    def _discard_mpu(self, upload_id: str) -> None:
+        mpu = self._mpu.pop(upload_id, None)
+        if mpu is None:
+            return
+        for n in mpu.parts:
+            self.backends[mpu.region].delete(mpu.bucket,
+                                             self._part_key(upload_id, n))
+
+    # -- legacy keyword surface (thin wrappers over dispatch) -----------------
+    def create_bucket(self, bucket: str) -> None:
+        self.dispatch(CreateBucketRequest(bucket))
+
+    def list_buckets(self) -> List[str]:
+        return self.dispatch(ListBucketsRequest()).buckets
+
+    def delete_bucket(self, bucket: str) -> None:
+        self.dispatch(DeleteBucketRequest(bucket))
+
+    def put_object(self, bucket: str, key: str, data: bytes, region: str) -> int:
+        return self.dispatch(PutRequest(bucket, key, region, body=data)).version
+
+    def get_object(self, bucket: str, key: str, region: str,
+                   version: Optional[int] = None) -> bytes:
+        return self.dispatch(GetRequest(bucket, key, region,
+                                        version=version)).body
 
     def head_object(self, bucket: str, key: str) -> HeadResult:
-        om = self.meta.head_object(bucket, key)
-        vm = om.latest
-        return HeadResult(key, vm.size, vm.etag, vm.last_modified)
+        r = self.dispatch(HeadRequest(bucket, key))
+        return HeadResult(r.key, r.size, r.etag, r.last_modified)
 
     def list_objects(self, bucket: str, prefix: str = "") -> List[str]:
-        return [om.key for om in self.meta.list_objects(bucket, prefix)]
+        keys: List[str] = []
+        token = None
+        while True:
+            r = self.dispatch(ListRequest(bucket, prefix,
+                                          continuation_token=token))
+            keys.extend(s.key for s in r.contents)
+            if not r.is_truncated:
+                return keys
+            token = r.next_continuation_token
 
     def delete_object(self, bucket: str, key: str) -> None:
-        for region, version in self.meta.delete_object(bucket, key):
-            self.backends[region].delete(bucket, self._pkey(key, version))
+        self.dispatch(DeleteObjectRequest(bucket, key))
 
     def delete_objects(self, bucket: str, keys: Iterable[str]) -> None:
-        for k in keys:
-            self.delete_object(bucket, k)
+        self.dispatch(DeleteObjectsRequest(bucket, list(keys)))
 
     def copy_object(self, bucket: str, src_key: str, dst_key: str, region: str) -> int:
-        data = self.get_object(bucket, src_key, region)
-        return self.put_object(bucket, dst_key, data, region)
+        return self.dispatch(CopyRequest(bucket, src_key, dst_key, region)).version
 
-    # -- multipart upload -----------------------------------------------------------
     def create_multipart_upload(self, bucket: str, key: str, region: str) -> str:
-        uid = hashlib.md5(f"{bucket}/{key}/{region}/{self._clock()}".encode()).hexdigest()
-        self._mpu[uid] = {}
-        return uid
+        return self.dispatch(CreateMultipartRequest(bucket, key, region)).upload_id
 
     def upload_part(self, upload_id: str, part_number: int, data: bytes) -> str:
-        self._mpu[upload_id][part_number] = bytes(data)
-        return hashlib.md5(data).hexdigest()
+        return self.dispatch(UploadPartRequest(upload_id, part_number,
+                                               bytes(data))).etag
 
     def complete_multipart_upload(self, bucket: str, key: str, region: str,
                                   upload_id: str) -> int:
-        parts = self._mpu.pop(upload_id)
-        blob = b"".join(parts[i] for i in sorted(parts))
-        return self.put_object(bucket, key, blob, region)
+        return self.dispatch(CompleteMultipartRequest(bucket, key, region,
+                                                      upload_id)).version
 
     def abort_multipart_upload(self, upload_id: str) -> None:
-        self._mpu.pop(upload_id, None)
+        self.dispatch(AbortMultipartRequest(upload_id))
 
     # -- maintenance ---------------------------------------------------------------
     def run_eviction_scan(self, now: Optional[float] = None) -> int:
@@ -188,3 +477,20 @@ class VirtualStore:
         return sorted(
             r for r, m in om.latest.replicas.items() if m.status == COMMITTED
         )
+
+    _HANDLERS = {
+        CreateBucketRequest: "_handle_create_bucket",
+        DeleteBucketRequest: "_handle_delete_bucket",
+        ListBucketsRequest: "_handle_list_buckets",
+        PutRequest: "_handle_put",
+        GetRequest: "_handle_get",
+        HeadRequest: "_handle_head",
+        ListRequest: "_handle_list",
+        DeleteObjectRequest: "_handle_delete_object",
+        DeleteObjectsRequest: "_handle_delete_objects",
+        CopyRequest: "_handle_copy",
+        CreateMultipartRequest: "_handle_create_mpu",
+        UploadPartRequest: "_handle_upload_part",
+        CompleteMultipartRequest: "_handle_complete_mpu",
+        AbortMultipartRequest: "_handle_abort_mpu",
+    }

@@ -33,6 +33,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 BLOCK_E = 256          # edge rows per grid step (sublane axis)
 LANES = 128
 
@@ -121,7 +124,7 @@ def ttl_cost_surface(
         in_specs=[row, row, row, brd, brd, vec, vec, vec],
         out_specs=row,
         out_shape=jax.ShapeDtypeStruct((e_pad, c_pad), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

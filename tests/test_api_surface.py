@@ -1,0 +1,560 @@
+"""Tests for the unified typed op layer (ObjectStoreAPI) and the full S3
+surface it exposes through VirtualStore, the S3Proxy wire codec, and the
+Simulator: ranged GET (incl. suffix ranges), paginated ListObjectsV2 with
+continuation tokens + delimiters, batch delete, conditional GET/HEAD
+(304/412), multipart part-list validation + backend spill, the copy_object
+replica short-circuit, and live-vs-simulated semantic parity."""
+
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.core import VirtualStore, make_backends, pick_regions
+from repro.core.api import (
+    ApiError,
+    CompleteMultipartRequest,
+    CopyRequest,
+    CreateMultipartRequest,
+    DeleteObjectsRequest,
+    GetRequest,
+    HeadRequest,
+    ListRequest,
+    ObjectStoreAPI,
+    PutRequest,
+    UploadPartRequest,
+    choose_get_source,
+    parse_range_header,
+    resolve_range,
+)
+from repro.core.s3_proxy import S3Proxy
+from repro.core.simulator import Simulator
+from repro.core.virtual_store import MPU_PREFIX
+from repro.core.policies import make_policy
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture
+def store():
+    cat = pick_regions(3)
+    be = make_backends(list(cat.region_names()), "memory")
+    clk = FakeClock()
+    vs = VirtualStore(cat, be, mode="FB", clock=clk)
+    vs.create_bucket("b")
+    return cat, be, vs, clk
+
+
+@pytest.fixture
+def proxies():
+    cat = pick_regions(3)
+    be = make_backends(list(cat.region_names()), "memory")
+    vs = VirtualStore(cat, be, mode="FB")
+    a, b, _ = cat.region_names()
+    pa = S3Proxy(vs, a).start()
+    pb = S3Proxy(vs, b).start()
+    yield vs, pa, pb
+    pa.stop()
+    pb.stop()
+
+
+def _req(method, url, data=None, headers=None):
+    req = urllib.request.Request(url, data=data, method=method,
+                                 headers=headers or {})
+    with urllib.request.urlopen(req, timeout=10) as resp:
+        return resp.status, resp.read(), dict(resp.headers)
+
+
+def _code(method, url, data=None, headers=None):
+    """Like _req but returns the status even for HTTP errors."""
+    try:
+        return _req(method, url, data, headers)[0]
+    except urllib.error.HTTPError as e:
+        return e.code
+
+
+# ---------------------------------------------------------------------------
+# Range parsing / resolution unit tests
+# ---------------------------------------------------------------------------
+
+def test_range_parse_and_resolve():
+    assert parse_range_header("bytes=0-99") == (0, 99)
+    assert parse_range_header("bytes=100-") == (100, None)
+    assert parse_range_header("bytes=-5") == (None, 5)
+    assert resolve_range((0, 99), 50) == (0, 49)      # end clamped
+    assert resolve_range((None, 5), 100) == (95, 99)  # suffix
+    assert resolve_range((10, None), 100) == (10, 99)
+    assert resolve_range(None, 100) is None
+    for bad in ("bytes=-", "bites=0-1", "bytes=5-2"):
+        with pytest.raises(ApiError):
+            parse_range_header(bad)
+    with pytest.raises(ApiError) as ei:
+        resolve_range((100, None), 100)               # start beyond size
+    assert ei.value.http_status == 416
+
+
+def test_choose_get_source_prefers_live_local():
+    cat = pick_regions(3)
+    a, b, c = cat.region_names()
+    # live local replica -> hit
+    src, hit = choose_get_source({a: float("inf"), b: 100.0}, b, 50.0, cat)
+    assert hit and src == b
+    # expired local replica, live remote -> routed remotely
+    src, hit = choose_get_source({a: float("inf"), b: 100.0}, b, 200.0, cat)
+    assert not hit and src == a
+    # everything expired -> last-resort fallback still serves
+    src, hit = choose_get_source({a: 10.0}, b, 99.0, cat)
+    assert not hit and src == a
+    with pytest.raises(ApiError):
+        choose_get_source({}, b, 0.0, cat)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-level: ranged + conditional GET
+# ---------------------------------------------------------------------------
+
+def test_dispatch_ranged_get_local_and_remote(store):
+    cat, be, vs, clk = store
+    a, b, _ = cat.region_names()
+    payload = bytes(range(256)) * 4                       # 1024 bytes
+    vs.put_object("b", "k", payload, a)
+
+    r = vs.dispatch(GetRequest("b", "k", a, range_=(16, 31)))
+    assert r.body == payload[16:32]
+    assert r.content_range == (16, 31, 1024) and r.size == 1024
+
+    # suffix range
+    r = vs.dispatch(GetRequest("b", "k", a, range_=(None, 10)))
+    assert r.body == payload[-10:]
+
+    # ranged read on a remote MISS still seeds a full replica (§2.3)
+    r = vs.dispatch(GetRequest("b", "k", b, range_=(0, 3)))
+    assert r.body == payload[:4] and not r.hit
+    assert set(vs.replica_regions("b", "k")) == {a, b}
+    assert be[b].get("b", "k@v1") == payload              # full copy landed
+
+
+def test_dispatch_conditional_get(store):
+    cat, _be, vs, _clk = store
+    a = cat.region_names()[0]
+    vs.put_object("b", "k", b"hello", a)
+    etag = vs.head_object("b", "k").etag
+
+    with pytest.raises(ApiError) as ei:
+        vs.dispatch(GetRequest("b", "k", a, if_none_match=f'"{etag}"'))
+    assert ei.value.code == "NotModified" and ei.value.http_status == 304
+
+    with pytest.raises(ApiError) as ei:
+        vs.dispatch(GetRequest("b", "k", a, if_match='"different"'))
+    assert ei.value.code == "PreconditionFailed" and ei.value.http_status == 412
+
+    # matching If-Match passes through
+    r = vs.dispatch(GetRequest("b", "k", a, if_match=f'"{etag}"'))
+    assert r.body == b"hello"
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-level: pagination over >1k keys + delimiter roll-up
+# ---------------------------------------------------------------------------
+
+def test_list_pagination_over_1k_keys(store):
+    cat, _be, vs, _clk = store
+    a = cat.region_names()[0]
+    n = 1200
+    for i in range(n):
+        vs.put_object("b", f"obj/{i:05d}", b"x", a)
+
+    r1 = vs.dispatch(ListRequest("b", prefix="obj/"))
+    assert len(r1.contents) == 1000 and r1.is_truncated
+    r2 = vs.dispatch(ListRequest("b", prefix="obj/",
+                                 continuation_token=r1.next_continuation_token))
+    assert len(r2.contents) == 200 and not r2.is_truncated
+    assert r2.next_continuation_token is None
+    keys = [s.key for s in r1.contents] + [s.key for s in r2.contents]
+    assert keys == sorted(keys) and len(set(keys)) == n
+
+    # the legacy wrapper transparently drains every page
+    assert len(vs.list_objects("b", "obj/")) == n
+
+
+def test_list_delimiter_common_prefixes(store):
+    cat, _be, vs, _clk = store
+    a = cat.region_names()[0]
+    for k in ("dir1/a", "dir1/b", "dir2/c", "top"):
+        vs.put_object("b", k, b"x", a)
+    r = vs.dispatch(ListRequest("b", delimiter="/"))
+    assert [s.key for s in r.contents] == ["top"]
+    assert r.common_prefixes == ["dir1/", "dir2/"]
+    assert r.key_count == 3
+
+    # pagination across rolled-up prefixes honors the continuation token
+    r1 = vs.dispatch(ListRequest("b", delimiter="/", max_keys=2))
+    assert r1.is_truncated and r1.key_count == 2
+    r2 = vs.dispatch(ListRequest("b", delimiter="/", max_keys=2,
+                                 continuation_token=r1.next_continuation_token))
+    names = ([s.key for s in r1.contents] + r1.common_prefixes +
+             [s.key for s in r2.contents] + r2.common_prefixes)
+    assert sorted(names) == ["dir1/", "dir2/", "top"]
+
+    with pytest.raises(ApiError) as ei:
+        vs.dispatch(ListRequest("nope"))
+    assert ei.value.code == "NoSuchBucket"
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-level: batch delete
+# ---------------------------------------------------------------------------
+
+def test_dispatch_batch_delete(store):
+    cat, be, vs, _clk = store
+    a = cat.region_names()[0]
+    for i in range(4):
+        vs.put_object("b", f"d/{i}", b"x", a)
+    r = vs.dispatch(DeleteObjectsRequest("b", ["d/0", "d/2", "missing"]))
+    assert set(r.deleted) == {"d/0", "d/2", "missing"}   # idempotent, like S3
+    assert r.errors == []
+    assert vs.list_objects("b", "d/") == ["d/1", "d/3"]
+    # physical bytes gone too
+    assert not be[a].exists("b", "d/0@v1")
+
+
+def test_single_delete_of_missing_key_raises(store):
+    _cat, _be, vs, _clk = store
+    with pytest.raises(ApiError) as ei:
+        vs.delete_object("b", "never-was")
+    assert ei.value.code == "NoSuchKey" and ei.value.http_status == 404
+
+
+# ---------------------------------------------------------------------------
+# Multipart: backend spill + part-list validation
+# ---------------------------------------------------------------------------
+
+def test_multipart_spills_parts_to_backend(store):
+    cat, be, vs, _clk = store
+    a = cat.region_names()[0]
+    uid = vs.dispatch(CreateMultipartRequest("b", "big", a)).upload_id
+    e1 = vs.dispatch(UploadPartRequest(uid, 1, b"HELLO ")).etag
+    e2 = vs.dispatch(UploadPartRequest(uid, 2, b"WORLD")).etag
+
+    # parts live in the region backend, not in proxy RAM
+    spilled = [h.key for h in be[a].list("b", MPU_PREFIX)]
+    assert len(spilled) == 2
+    assert vs._mpu[uid].parts[1] == (e1, 6)               # only (etag, size)
+
+    r = vs.dispatch(CompleteMultipartRequest("b", "big", a, uid,
+                                             parts=[(1, e1), (2, e2)]))
+    assert r.size == 11
+    assert vs.get_object("b", "big", a) == b"HELLO WORLD"
+    # spill space reclaimed
+    assert [h.key for h in be[a].list("b", MPU_PREFIX)] == []
+    assert uid not in vs._mpu
+
+
+def test_multipart_part_list_validation(store):
+    cat, _be, vs, _clk = store
+    a = cat.region_names()[0]
+    uid = vs.dispatch(CreateMultipartRequest("b", "big", a)).upload_id
+    e1 = vs.dispatch(UploadPartRequest(uid, 1, b"A" * 8)).etag
+
+    with pytest.raises(ApiError) as ei:      # part never uploaded
+        vs.dispatch(CompleteMultipartRequest("b", "big", a, uid,
+                                             parts=[(1, e1), (2, "beef")]))
+    assert ei.value.code == "InvalidPart"
+
+    with pytest.raises(ApiError) as ei:      # wrong etag
+        vs.dispatch(CompleteMultipartRequest("b", "big", a, uid,
+                                             parts=[(1, "wrong")]))
+    assert ei.value.code == "InvalidPart"
+
+    with pytest.raises(ApiError) as ei:      # duplicate/unordered numbers
+        vs.dispatch(CompleteMultipartRequest("b", "big", a, uid,
+                                             parts=[(1, e1), (1, e1)]))
+    assert ei.value.code == "InvalidPartOrder"
+
+    with pytest.raises(ApiError) as ei:      # unknown upload id
+        vs.dispatch(CompleteMultipartRequest("b", "big", a, "bogus"))
+    assert ei.value.code == "NoSuchUpload"
+
+    # the upload is still completable after failed attempts
+    r = vs.dispatch(CompleteMultipartRequest("b", "big", a, uid,
+                                             parts=[(1, e1)]))
+    assert vs.get_object("b", "big", a) == b"A" * 8 and r.version == 1
+
+
+# ---------------------------------------------------------------------------
+# copy_object short-circuit
+# ---------------------------------------------------------------------------
+
+def test_copy_short_circuits_on_committed_local_replica(store):
+    cat, _be, vs, clk = store
+    a, b, _ = cat.region_names()
+    vs.put_object("b", "src", b"z" * 1024, a)
+    vs.get_object("b", "src", b)                 # replicate-on-read a -> b
+    moved_before = dict(vs.transfers.bytes_moved)
+    assert moved_before.get((a, b)) == 1024
+
+    # replica at b is committed but let its TTL lapse (scan hasn't run yet)
+    rep = vs.meta.head_object("b", "src").latest.replicas[b]
+    rep.ttl, rep.last_access = 1.0, 0.0
+    clk.t = 3600.0
+
+    vs.dispatch(CopyRequest("b", "src", "dst", b))
+    # no new cross-region transfer was charged: the copy read the local bytes
+    assert vs.transfers.bytes_moved == moved_before
+    assert vs.get_object("b", "dst", b) == b"z" * 1024
+    # and the destination object was written locally at b
+    assert vs.replica_regions("b", "dst") == [b]
+
+
+def test_copy_short_circuit_read_repairs_lost_bytes(store):
+    """If the committed local replica's physical bytes are gone (region
+    outage), the copy falls back to the surviving replicas like a GET."""
+    cat, be, vs, _clk = store
+    a, b, _ = cat.region_names()
+    vs.put_object("b", "src", b"y" * 256, a)
+    vs.get_object("b", "src", b)                 # committed replica at b
+    be[b].delete("b", "src@v1")                  # outage: bytes vanish at b
+    vs.dispatch(CopyRequest("b", "src", "dst", b))
+    assert vs.get_object("b", "dst", b) == b"y" * 256
+
+
+def test_delete_bucket_reclaims_multipart_spill(store):
+    cat, be, vs, _clk = store
+    a = cat.region_names()[0]
+    vs.create_bucket("tmp")
+    uid = vs.dispatch(CreateMultipartRequest("tmp", "k", a)).upload_id
+    vs.dispatch(UploadPartRequest(uid, 1, b"x" * 32))
+    assert len(list(be[a].list("tmp", MPU_PREFIX))) == 1
+    vs.delete_bucket("tmp")
+    assert list(be[a].list("tmp", MPU_PREFIX)) == []
+    assert uid not in vs._mpu
+
+
+def test_copy_without_local_replica_still_transfers(store):
+    cat, _be, vs, _clk = store
+    a, b, _ = cat.region_names()
+    vs.put_object("b", "src", b"q" * 512, a)
+    vs.dispatch(CopyRequest("b", "src", "dst", b))      # must pull a -> b
+    assert vs.transfers.bytes_moved.get((a, b)) == 512
+
+
+# ---------------------------------------------------------------------------
+# Live store vs simulator: one op language, same routing semantics
+# ---------------------------------------------------------------------------
+
+def test_virtualstore_and_simulator_implement_the_protocol():
+    cat = pick_regions(3)
+    vs = VirtualStore(cat, make_backends(list(cat.region_names()), "memory"))
+    sim = Simulator(cat, make_policy("always_store", cat), mode="FB")
+    assert isinstance(vs, ObjectStoreAPI)
+    assert isinstance(sim, ObjectStoreAPI)
+
+
+def test_live_and_simulated_hit_sequences_agree():
+    """Replay one request sequence through both planes: the hit/miss pattern
+    (the §2.3 routing semantics) must be identical."""
+    cat = pick_regions(3)
+    a, b, _ = cat.region_names()
+    reqs = [
+        PutRequest("bkt", "1", a, body=b"x" * 64, size=64, at=0.0),
+        GetRequest("bkt", "1", b, at=10.0),      # miss: replicate a -> b
+        GetRequest("bkt", "1", b, at=20.0),      # hit at b
+        GetRequest("bkt", "1", a, at=30.0),      # hit at base
+    ]
+
+    vs = VirtualStore(cat, make_backends(list(cat.region_names()), "memory"),
+                      mode="FB", clock=lambda: 0.0)
+    vs.create_bucket("bkt")
+    live_hits = []
+    for r in reqs:
+        resp = vs.dispatch(r)
+        if isinstance(r, GetRequest):
+            live_hits.append(resp.hit)
+
+    sim = Simulator(cat, make_policy("always_store", cat), mode="FB")
+    for r in reqs:
+        sim.dispatch(r)
+    assert live_hits == [False, True, True]
+    assert sim.report.n_miss == 1 and sim.report.n_hit == 2
+
+
+# ---------------------------------------------------------------------------
+# Over real HTTP: the full wire surface
+# ---------------------------------------------------------------------------
+
+def test_http_ranged_get(proxies):
+    vs, pa, pb = proxies
+    payload = bytes(range(256)) * 2
+    _req("PUT", f"{pa.endpoint}/r")
+    _req("PUT", f"{pa.endpoint}/r/k", data=payload)
+
+    st, body, hdrs = _req("GET", f"{pa.endpoint}/r/k",
+                          headers={"Range": "bytes=0-15"})
+    assert st == 206 and body == payload[:16]
+    assert hdrs["Content-Range"] == f"bytes 0-15/{len(payload)}"
+
+    st, body, _ = _req("GET", f"{pa.endpoint}/r/k",
+                       headers={"Range": "bytes=-8"})      # suffix
+    assert st == 206 and body == payload[-8:]
+
+    # cross-region ranged GET replicates the full object
+    st, body, _ = _req("GET", f"{pb.endpoint}/r/k",
+                       headers={"Range": "bytes=4-7"})
+    assert st == 206 and body == payload[4:8]
+    assert set(vs.replica_regions("r", "k")) == {pa.region, pb.region}
+
+    assert _code("GET", f"{pa.endpoint}/r/k",
+                 headers={"Range": f"bytes={len(payload)}-"}) == 416
+
+
+def test_http_list_pagination_and_delimiter(proxies):
+    vs, pa, _pb = proxies
+    _req("PUT", f"{pa.endpoint}/pg")
+    for i in range(45):
+        vs.put_object("pg", f"logs/{i:04d}", b"x", pa.region)
+    vs.put_object("pg", "readme", b"x", pa.region)
+
+    seen, token = [], None
+    pages = 0
+    while True:
+        url = f"{pa.endpoint}/pg?list-type=2&prefix=logs/&max-keys=20"
+        if token:
+            url += f"&continuation-token={token}"
+        _st, body, _ = _req("GET", url)
+        text = body.decode()
+        seen += [s.split("</Key>")[0] for s in text.split("<Key>")[1:]]
+        pages += 1
+        if "<NextContinuationToken>" not in text:
+            assert "<IsTruncated>false</IsTruncated>" in text
+            break
+        token = text.split("<NextContinuationToken>")[1].split("<")[0]
+    assert pages == 3 and len(seen) == 45 and seen == sorted(seen)
+
+    # delimiter rolls keys up into CommonPrefixes
+    _st, body, _ = _req("GET", f"{pa.endpoint}/pg?list-type=2&delimiter=/")
+    text = body.decode()
+    assert "<CommonPrefixes><Prefix>logs/</Prefix></CommonPrefixes>" in text
+    assert "<Key>readme</Key>" in text and "<Key>logs/0000</Key>" not in text
+
+
+def test_http_batch_delete(proxies):
+    vs, pa, _pb = proxies
+    _req("PUT", f"{pa.endpoint}/bd")
+    for i in range(3):
+        vs.put_object("bd", f"k{i}", b"x", pa.region)
+    manifest = ("<Delete>" +
+                "".join(f"<Object><Key>k{i}</Key></Object>" for i in range(2)) +
+                "<Object><Key>ghost</Key></Object></Delete>").encode()
+    st, body, _ = _req("POST", f"{pa.endpoint}/bd?delete", data=manifest)
+    text = body.decode()
+    assert st == 200
+    assert "<Deleted><Key>k0</Key></Deleted>" in text
+    assert "<Deleted><Key>k1</Key></Deleted>" in text
+    assert "<Deleted><Key>ghost</Key></Deleted>" in text   # idempotent
+    assert vs.list_objects("bd") == ["k2"]
+
+
+S3_NS = 'xmlns="http://s3.amazonaws.com/doc/2006-03-01/"'
+
+
+def test_http_namespaced_manifests_parse(proxies):
+    """Real S3 SDKs namespace their XML manifests; both batch delete and
+    multipart completion must parse (and validate!) them."""
+    vs, pa, _pb = proxies
+    _req("PUT", f"{pa.endpoint}/ns")
+    vs.put_object("ns", "a", b"x", pa.region)
+    manifest = (f"<Delete {S3_NS}><Object><Key>a</Key></Object>"
+                "</Delete>").encode()
+    st, body, _ = _req("POST", f"{pa.endpoint}/ns?delete", data=manifest)
+    assert st == 200 and b"<Deleted><Key>a</Key></Deleted>" in body
+
+    _st, body, _ = _req("POST", f"{pa.endpoint}/ns/mp?uploads")
+    uid = body.split(b"<UploadId>")[1].split(b"</UploadId>")[0].decode()
+    _req("PUT", f"{pa.endpoint}/ns/mp?partNumber=1&uploadId={uid}", data=b"P1")
+    # a namespaced manifest with a bad ETag must still be VALIDATED (400),
+    # not silently fall back to "complete with whatever was uploaded"
+    bad = (f"<CompleteMultipartUpload {S3_NS}><Part><PartNumber>1</PartNumber>"
+           '<ETag>"junk"</ETag></Part></CompleteMultipartUpload>').encode()
+    assert _code("POST", f"{pa.endpoint}/ns/mp?uploadId={uid}", data=bad) == 400
+    # well-formed manifest listing zero parts is an error, not legacy mode
+    empty = f"<CompleteMultipartUpload {S3_NS}/>".encode()
+    assert _code("POST", f"{pa.endpoint}/ns/mp?uploadId={uid}", data=empty) == 400
+
+
+def test_http_conditional_get_and_head(proxies):
+    _vs, pa, _pb = proxies
+    _req("PUT", f"{pa.endpoint}/cond")
+    _req("PUT", f"{pa.endpoint}/cond/k", data=b"abc")
+    _st, _b, hdrs = _req("GET", f"{pa.endpoint}/cond/k")
+    etag = hdrs["ETag"]
+
+    try:
+        _req("GET", f"{pa.endpoint}/cond/k", headers={"If-None-Match": etag})
+        assert False, "expected 304"
+    except urllib.error.HTTPError as e:
+        assert e.code == 304
+        assert e.headers["ETag"] == etag     # RFC 7232: 304 carries the ETag
+    assert _code("HEAD", f"{pa.endpoint}/cond/k",
+                 headers={"If-None-Match": etag}) == 304
+    assert _code("GET", f"{pa.endpoint}/cond/k",
+                 headers={"If-Match": '"nope"'}) == 412
+    st, body, _ = _req("GET", f"{pa.endpoint}/cond/k",
+                       headers={"If-Match": etag})
+    assert st == 200 and body == b"abc"
+
+
+def test_http_delete_error_mapping(proxies):
+    vs, pa, _pb = proxies
+    _req("PUT", f"{pa.endpoint}/dm")
+    # deleting a missing key is 404 NoSuchKey, not 409
+    assert _code("DELETE", f"{pa.endpoint}/dm/nothing") == 404
+    # deleting a non-empty bucket is still 409
+    vs.put_object("dm", "k", b"x", pa.region)
+    assert _code("DELETE", f"{pa.endpoint}/dm") == 409
+    # empty it out and the bucket delete goes through
+    assert _code("DELETE", f"{pa.endpoint}/dm/k") == 204
+    assert _code("DELETE", f"{pa.endpoint}/dm") == 204
+    assert _code("DELETE", f"{pa.endpoint}/dm") == 404     # NoSuchBucket now
+
+
+def test_http_malformed_client_values_get_400(proxies):
+    vs, pa, _pb = proxies
+    _req("PUT", f"{pa.endpoint}/mv")
+    vs.put_object("mv", "k", b"x", pa.region)
+    assert _code("GET", f"{pa.endpoint}/mv?list-type=2&max-keys=abc") == 400
+    assert _code("GET", f"{pa.endpoint}/mv/k?versionId=abc") == 400
+    assert _code("PUT", f"{pa.endpoint}/mv/k2?partNumber=abc&uploadId=x") == 400
+    assert _code("PUT", f"{pa.endpoint}/mv/k2",
+                 headers={"x-amz-copy-source": "no-slash"}) == 400
+
+
+def test_http_multipart_with_manifest_validation(proxies):
+    vs, pa, _pb = proxies
+    _req("PUT", f"{pa.endpoint}/mp")
+    _st, body, _ = _req("POST", f"{pa.endpoint}/mp/obj?uploads")
+    uid = body.split(b"<UploadId>")[1].split(b"</UploadId>")[0].decode()
+    _st, _b, h1 = _req("PUT", f"{pa.endpoint}/mp/obj?partNumber=1&uploadId={uid}",
+                       data=b"PART-ONE|")
+    _st, _b, h2 = _req("PUT", f"{pa.endpoint}/mp/obj?partNumber=2&uploadId={uid}",
+                       data=b"PART-TWO")
+
+    bad = ("<CompleteMultipartUpload>"
+           "<Part><PartNumber>1</PartNumber><ETag>\"junk\"</ETag></Part>"
+           "</CompleteMultipartUpload>").encode()
+    assert _code("POST", f"{pa.endpoint}/mp/obj?uploadId={uid}", data=bad) == 400
+
+    good = ("<CompleteMultipartUpload>"
+            f"<Part><PartNumber>1</PartNumber><ETag>{h1['ETag']}</ETag></Part>"
+            f"<Part><PartNumber>2</PartNumber><ETag>{h2['ETag']}</ETag></Part>"
+            "</CompleteMultipartUpload>").encode()
+    st, _b, _h = _req("POST", f"{pa.endpoint}/mp/obj?uploadId={uid}", data=good)
+    assert st == 200
+    assert _req("GET", f"{pa.endpoint}/mp/obj")[1] == b"PART-ONE|PART-TWO"
+    # completing again: the upload is gone
+    assert _code("POST", f"{pa.endpoint}/mp/obj?uploadId={uid}", data=good) == 404
