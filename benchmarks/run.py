@@ -5,6 +5,7 @@ followed by the full human-readable tables.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --quick    # small sizes
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI canary (~20 s)
 """
 
 from __future__ import annotations
@@ -20,11 +21,66 @@ def _emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+def smoke() -> int:
+    """CI canary: every benchmark entry point plus one differential replay,
+    at tiny sizes.  Exits non-zero if cost numbers stop making sense, so the
+    benchmark surface cannot silently rot."""
+    failures = []
+
+    t0 = time.perf_counter()
+    fig1 = paper_tables.fig1_cost_curve(n_objects=60)
+    _emit("smoke_fig1", (time.perf_counter() - t0) * 1e6,
+          f"rows={len(fig1)}")
+    if not fig1 or fig1[0]["best_ttl_days"] <= 0:
+        failures.append("fig1 produced no sensible TTL optimum")
+
+    t0 = time.perf_counter()
+    fig5 = paper_tables.fig5_two_region(n_objects=12)
+    worst = max(max(v.values()) for v in fig5.values())
+    _emit("smoke_fig5", (time.perf_counter() - t0) * 1e6,
+          f"max_baseline_over_skystore={worst:.1f}x")
+    if worst < 1.0:
+        failures.append("fig5: no baseline costs more than skystore")
+
+    from repro.core.costmodel import pick_regions
+    from repro.core.replay import replay_differential
+    from repro.core.workloads import make_workload
+    cat = pick_regions(3)
+    tr = make_workload("zipfian", cat.region_names(), seed=7,
+                       n_objects=60, n_requests=500)
+    for pol in ("skystore", "always_evict"):
+        t0 = time.perf_counter()
+        r = replay_differential(tr, cat, pol, workload="zipfian-smoke")
+        _emit(f"smoke_replay_{pol}", (time.perf_counter() - t0) * 1e6,
+              f"max_rel_cost_delta={r.max_rel_cost_delta:.1e}")
+        if not r.ok():
+            failures.append(f"replay divergence for {pol}: {r.summary_line()}")
+
+    t0 = time.perf_counter()
+    kb = kernel_bench.ttl_scan_bench(e_dim=128)
+    _emit("smoke_kernel_ttl_scan", (time.perf_counter() - t0) * 1e6,
+          f"edges={kb['edges_per_refresh']}")
+
+    sb = kernel_bench.simulator_bench()
+    _emit("smoke_simulator", sb["us_per_event"],
+          f"events_per_s={sb['events_per_s']:.0f}")
+
+    if failures:
+        for f in failures:
+            print("SMOKE FAIL:", f)
+        return 1
+    print("smoke: all benchmark entry points healthy")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
     n_obj = 40 if args.quick else None       # None = per-trace defaults
     n_obj_mc = 30 if args.quick else 60
     results = {}

@@ -9,9 +9,17 @@ Public surface:
   ttl_policy     -- ExpectedCost(TTL), argmin scan, adaptive controller
   policies       -- SkyStore + every §6.2.2 baseline
   simulator      -- event-driven monetary-cost simulator
+  ledger         -- CostReport + the live-plane CostLedger (per-request
+                    charging of the same CostModel the simulator uses)
+  replay         -- differential trace replay: Simulator vs live
+                    VirtualStore, with golden-cost regression fixtures
+                    (python -m repro.core.replay --update-golden)
   traces         -- synthetic IBM-trace profiles + workload types A-E
+  workloads      -- parameterized generators (zipfian, hotspot_shift,
+                    diurnal, write_heavy, scan_backup)
   metadata       -- control plane (2PC, versioning, eviction scan, backup)
-  virtual_store  -- client-facing virtual bucket/object API
+  virtual_store  -- client-facing virtual bucket/object API; accepts any
+                    Policy via VirtualStore(policy=...) for live placement
   backends       -- physical per-region stores (memory / filesystem)
 """
 
@@ -48,8 +56,12 @@ from .costmodel import (  # noqa: F401
     tpu_tier_catalog,
 )
 from .histogram import AccessHistogram, RollingHistogram, cell_edges  # noqa: F401
+from .ledger import CostLedger, CostReport  # noqa: F401
 from .policies import Policy, make_policy  # noqa: F401
-from .simulator import CostReport, Simulator, run_policy  # noqa: F401
+# NOTE: repro.core.replay (the differential replay driver) is deliberately
+# not imported here so `python -m repro.core.replay` stays runpy-clean;
+# import it directly: `from repro.core.replay import replay_differential`.
+from .simulator import Simulator, run_policy  # noqa: F401
 from .traces import (  # noqa: F401
     TRACE_NAMES,
     WORKLOAD_KINDS,
@@ -67,3 +79,4 @@ from .ttl_policy import (  # noqa: F401
 from .virtual_store import VirtualStore  # noqa: F401
 from .metadata import MetadataServer  # noqa: F401
 from .backends import FSBackend, InMemoryBackend, make_backends  # noqa: F401
+from .workloads import WORKLOAD_NAMES, make_workload  # noqa: F401

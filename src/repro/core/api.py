@@ -204,6 +204,8 @@ class GetResponse:
 class HeadRequest:
     bucket: str
     key: str
+    #: issuing region, for per-request op charges; None = charge not modeled
+    region: Optional[str] = None
     if_match: Optional[str] = None
     if_none_match: Optional[str] = None
     at: Optional[float] = None
@@ -225,6 +227,8 @@ class ListRequest:
     max_keys: int = 1000
     continuation_token: Optional[str] = None
     delimiter: Optional[str] = None
+    #: issuing region, for per-request op charges; None = charge not modeled
+    region: Optional[str] = None
     at: Optional[float] = None
 
 

@@ -67,13 +67,26 @@ def _etag(data: bytes) -> str:
 
 
 class InMemoryBackend(Backend):
+    """Dict-backed region store with per-op counters.
+
+    The counters (`op_counts`, `bytes_in`, `bytes_out`) let the differential
+    replay harness cross-check that metadata-level accounting corresponds to
+    real physical traffic: every charged replication moved actual bytes.
+    """
+
     def __init__(self, region: str):
         self.region = region
         self._data: Dict[Tuple[str, str], Tuple[bytes, HeadResult]] = {}
+        self.op_counts: Dict[str, int] = {"put": 0, "get": 0, "delete": 0,
+                                          "head": 0, "list": 0}
+        self.bytes_in = 0
+        self.bytes_out = 0
 
     def put(self, bucket, key, data):
         h = HeadResult(key, len(data), _etag(data), time.time())
         self._data[(bucket, key)] = (bytes(data), h)
+        self.op_counts["put"] += 1
+        self.bytes_in += len(data)
         return h
 
     def get(self, bucket, key, byte_range=None):
@@ -81,24 +94,29 @@ class InMemoryBackend(Backend):
             data = self._data[(bucket, key)][0]
         except KeyError:
             raise KeyError(f"{self.region}: {bucket}/{key} not found") from None
+        self.op_counts["get"] += 1
         if byte_range is not None:
             start, end = byte_range
-            return data[start:end + 1]
+            data = data[start:end + 1]
+        self.bytes_out += len(data)
         return data
 
     def head(self, bucket, key):
+        self.op_counts["head"] += 1
         try:
             return self._data[(bucket, key)][1]
         except KeyError:
             raise KeyError(f"{self.region}: {bucket}/{key} not found") from None
 
     def delete(self, bucket, key):
+        self.op_counts["delete"] += 1
         self._data.pop((bucket, key), None)
 
     def list(self, bucket, prefix=""):
-        for (b, k), (_d, h) in sorted(self._data.items()):
-            if b == bucket and k.startswith(prefix):
-                yield h
+        self.op_counts["list"] += 1      # counted even if never iterated
+        matches = [h for (b, k), (_d, h) in sorted(self._data.items())
+                   if b == bucket and k.startswith(prefix)]
+        return iter(matches)
 
     @property
     def stored_bytes(self) -> int:

@@ -121,8 +121,12 @@ class CostModel:
         return self.egress_price(src, dst) * (size_bytes / GB)
 
     def op_cost(self, region: str, op: str, n: int = 1) -> float:
+        """Per-request charge.  S3 prices requests in two tiers: the mutation
+        tier (PUT/COPY/POST/LIST/DELETE, ~$5/M) and the read tier
+        (GET/HEAD/SELECT, ~$0.4/M); HEAD bills as a GET."""
         r = self.regions[region]
-        return (r.put_price if op.upper() in ("PUT", "COPY", "DELETE") else r.get_price) * n
+        tier1 = ("PUT", "COPY", "POST", "LIST", "DELETE")
+        return (r.put_price if op.upper() in tier1 else r.get_price) * n
 
     # -- latency model (Table 6) --------------------------------------------
     def get_latency_ms(self, src: str, dst: str, size_bytes: float) -> float:

@@ -1,0 +1,227 @@
+"""Live-plane cost accounting: the :class:`CostLedger`.
+
+The paper's central methodological claim (§3.2, §5) is that the cost
+simulator and the live serving path share one semantic rule set, so policy
+costs measured in simulation transfer to deployment.  PR 1 unified the *op
+language* (`repro.core.api`); this module unifies the *accounting*: a
+:class:`CostLedger` attached to a live :class:`~repro.core.virtual_store.
+VirtualStore` / :class:`~repro.core.metadata.MetadataServer` charges the same
+:class:`~repro.core.costmodel.CostModel` per request -- storage GB-months
+integrated over each replica's [commit, drop) lifetime, egress per
+cross-region GET / base sync / replication, and per-op request charges -- and
+produces the same :class:`CostReport` the simulator emits, so the two planes
+are directly diffable (see :mod:`repro.core.replay`).
+
+:class:`CostReport` itself lives here (not in ``simulator``) because it is
+the shared currency of *both* planes; ``repro.core.simulator`` re-exports it
+for backwards compatibility.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .costmodel import CostModel
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class CostReport:
+    policy: str
+    mode: str
+    storage: float = 0.0        # evictable (cache-side) replica storage
+    storage_base: float = 0.0   # pinned FB base replicas -- identical across
+    # policies by construction (§3.1 compares cache-side cost + egress only)
+    network: float = 0.0
+    ops: float = 0.0
+    n_get: int = 0
+    n_put: int = 0
+    n_head: int = 0
+    n_list: int = 0
+    n_hit: int = 0
+    n_miss: int = 0
+    n_evictions: int = 0
+    n_replications: int = 0
+    get_latency_ms: List[float] = dataclasses.field(default_factory=list)
+    put_latency_ms: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def total(self) -> float:
+        """Full bill, base replicas included."""
+        return self.storage + self.storage_base + self.network + self.ops
+
+    @property
+    def policy_cost(self) -> float:
+        """The §3.1 objective: costs the policy can influence (cache-side
+        storage + network + ops).  FB base storage is constant across
+        policies and excluded; in FP mode there are no pinned replicas and
+        ``policy_cost == total``."""
+        return self.storage + self.network + self.ops
+
+    def latency_stats(self) -> Dict[str, float]:
+        out = {}
+        for name, xs in (("get", self.get_latency_ms), ("put", self.put_latency_ms)):
+            if xs:
+                a = np.asarray(xs)
+                out[f"{name}_avg"] = float(a.mean())
+                out[f"{name}_p90"] = float(np.percentile(a, 90))
+                out[f"{name}_p99"] = float(np.percentile(a, 99))
+        return out
+
+    def components(self) -> Dict[str, float]:
+        """The diffable dollar components (used by the replay harness)."""
+        return {
+            "storage": self.storage,
+            "storage_base": self.storage_base,
+            "network": self.network,
+            "ops": self.ops,
+            "total": self.total,
+        }
+
+    def counters(self) -> Dict[str, int]:
+        return {
+            "n_get": self.n_get,
+            "n_put": self.n_put,
+            "n_head": self.n_head,
+            "n_list": self.n_list,
+            "n_hit": self.n_hit,
+            "n_miss": self.n_miss,
+            "n_evictions": self.n_evictions,
+            "n_replications": self.n_replications,
+        }
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "policy": self.policy,
+            "mode": self.mode,
+            "total": self.total,
+            "policy_cost": self.policy_cost,
+            "storage": self.storage,
+            "storage_base": self.storage_base,
+            "network": self.network,
+            "ops": self.ops,
+            "hit_rate": self.n_hit / max(self.n_get, 1),
+        }
+
+
+@dataclasses.dataclass
+class _OpenReplica:
+    """An in-flight replica lifetime: committed, not yet dropped."""
+
+    region: str
+    start: float
+    size: float
+    pinned: bool
+
+
+class CostLedger:
+    """Charges the live plane exactly the way the simulator charges itself.
+
+    Replica lifetimes open on ``on_replica_commit`` and close on
+    ``on_replica_drop`` (eviction scan, LWW overwrite, DELETE, policy
+    decision); storage is integrated over [start, end) capped at the trace
+    horizon, exactly mirroring ``Simulator._charge_storage``.  Transfers and
+    per-op charges are recorded at the call sites in
+    :class:`~repro.core.virtual_store.VirtualStore`.
+    """
+
+    def __init__(
+        self,
+        cost: CostModel,
+        policy: str = "live",
+        mode: str = "FB",
+        horizon: float = 0.0,
+        charge_ops: bool = True,
+    ) -> None:
+        self.cost = cost
+        self.horizon = horizon
+        self.charge_ops = charge_ops
+        self.report = CostReport(policy, mode)
+        self._open: Dict[Tuple[str, str, str], _OpenReplica] = {}
+
+    # -- replica lifetimes ---------------------------------------------------
+    # Lifetimes are keyed by (bucket, key, region, version): under a
+    # versioning MetadataServer two versions of one key can hold distinct
+    # physical replicas in the same region, each billed separately.
+    def on_replica_commit(
+        self, bucket: str, key: str, region: str, size: float, pinned: bool,
+        now: float, version: int = 0,
+    ) -> None:
+        entry = self._open.get((bucket, key, region, version))
+        if entry is not None:
+            # Re-commit of a live replica (TTL refresh): the lifetime is
+            # continuous -- keep the original start, like the simulator's
+            # ``_add_replica`` reuse path.
+            entry.pinned = entry.pinned or pinned
+            return
+        self._open[(bucket, key, region, version)] = _OpenReplica(
+            region, now, float(size), pinned)
+
+    def on_replica_drop(
+        self, bucket: str, key: str, region: str, end: float,
+        count_eviction: bool = False, version: int = 0,
+    ) -> None:
+        entry = self._open.pop((bucket, key, region, version), None)
+        if entry is None:
+            return
+        self._charge_storage(entry, end)
+        if count_eviction:
+            self.report.n_evictions += 1
+
+    def _charge_storage(self, entry: _OpenReplica, end: float) -> None:
+        end = min(end, self.horizon) if self.horizon else end
+        c = self.cost.storage_cost(entry.region, entry.size, end - entry.start)
+        if entry.pinned:
+            self.report.storage_base += c
+        else:
+            self.report.storage += c
+
+    # -- money ---------------------------------------------------------------
+    def charge_transfer(self, src: str, dst: str, nbytes: float) -> None:
+        self.report.network += self.cost.transfer_cost(src, dst, nbytes)
+
+    def charge_op(self, region: Optional[str], op: str) -> None:
+        if self.charge_ops and region is not None:
+            self.report.ops += self.cost.op_cost(region, op)
+
+    # -- counters ------------------------------------------------------------
+    def count_get(self, hit: bool) -> None:
+        self.report.n_get += 1
+        self.report.n_hit += int(hit)
+        self.report.n_miss += int(not hit)
+
+    def count_put(self) -> None:
+        self.report.n_put += 1
+
+    def count_head(self) -> None:
+        self.report.n_head += 1
+
+    def count_list(self) -> None:
+        self.report.n_list += 1
+
+    def count_replication(self) -> None:
+        self.report.n_replications += 1
+
+    # -- end of replay -------------------------------------------------------
+    def finalize(self, horizon: float, meta=None) -> CostReport:
+        """Close every still-open lifetime at ``min(expire, horizon)`` --
+        the simulator's end-of-run flush.  ``meta`` (a MetadataServer) is
+        consulted for each surviving replica's expiry; pinned replicas and
+        replicas with infinite TTL charge through to the horizon."""
+        self.horizon = self.horizon or horizon
+        for (bucket, key, region, version), entry in sorted(self._open.items()):
+            end = horizon
+            if meta is not None:
+                om = meta.objects.get((bucket, key))
+                vm = next((v for v in om.versions if v.version == version),
+                          None) if om is not None else None
+                rm = vm.replicas.get(region) if vm is not None else None
+                if rm is not None and not rm.pinned:
+                    end = min(rm.expire, horizon)
+            self._charge_storage(entry, end)
+        self._open.clear()
+        return self.report

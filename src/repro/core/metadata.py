@@ -17,15 +17,17 @@ physical stores to recover from an incomplete backup.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import json
 import time
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .api import ApiError, choose_get_source, resolve_put_placement
 from .costmodel import CostModel
+from .ledger import CostLedger
 from .ttl_policy import AdaptiveTTLController
 
 PENDING, COMMITTED = "pending", "committed"
@@ -90,14 +92,25 @@ class MetadataServer:
         controller: Optional[AdaptiveTTLController] = None,
         pending_timeout: float = 300.0,
         versioning: bool = True,
+        ledger: Optional[CostLedger] = None,
+        min_fp_copies: int = 1,
     ) -> None:
         self.cost = cost
         self.mode = mode
         self.ctl = controller or AdaptiveTTLController(cost)
         self.pending_timeout = pending_timeout
         self.versioning = versioning
+        #: FP-mode safety floor: the eviction scan never drops below this
+        #: many committed copies (same knob as Simulator.min_fp_copies).
+        self.min_fp_copies = min_fp_copies
+        #: Optional live-plane cost accounting (see repro.core.ledger): replica
+        #: lifetime open/close events are reported from the mutation sites.
+        self.ledger = ledger
         self.objects: Dict[Tuple[str, str], ObjectMeta] = {}
         self.buckets: Dict[str, dict] = {}
+        #: per-bucket sorted key index -- keeps paginated listings O(page)
+        #: instead of re-sorting the whole object table per page
+        self._key_index: Dict[str, List[str]] = {}
         self._last_get: Dict[Tuple[str, str, str], float] = {}
         self._pending: Dict[Tuple[str, str, str, int], float] = {}
         self.op_log: List[dict] = []
@@ -105,6 +118,7 @@ class MetadataServer:
     # -- buckets ---------------------------------------------------------------
     def create_bucket(self, bucket: str, **attrs) -> None:
         self.buckets.setdefault(bucket, dict(created=time.time(), **attrs))
+        self._key_index.setdefault(bucket, [])
 
     def list_buckets(self) -> List[str]:
         return sorted(self.buckets)
@@ -112,9 +126,24 @@ class MetadataServer:
     def delete_bucket(self, bucket: str) -> None:
         if bucket not in self.buckets:
             raise ApiError("NoSuchBucket", f"no such bucket {bucket!r}")
-        if any(b == bucket for (b, _k) in self.objects):
+        if self._key_index.get(bucket):
             raise ApiError("BucketNotEmpty", f"bucket {bucket!r} not empty")
         del self.buckets[bucket]
+        self._key_index.pop(bucket, None)
+
+    def _index_add(self, bucket: str, key: str) -> None:
+        keys = self._key_index.setdefault(bucket, [])
+        i = bisect.bisect_left(keys, key)
+        if i == len(keys) or keys[i] != key:
+            keys.insert(i, key)
+
+    def _index_remove(self, bucket: str, key: str) -> None:
+        keys = self._key_index.get(bucket)
+        if keys is None:
+            return
+        i = bisect.bisect_left(keys, key)
+        if i < len(keys) and keys[i] == key:
+            keys.pop(i)
 
     # -- 2PC writes ---------------------------------------------------------------
     def begin_upload(
@@ -128,6 +157,7 @@ class MetadataServer:
         if om is None:
             om = ObjectMeta(bucket, key, None, [])
             self.objects[(bucket, key)] = om
+            self._index_add(bucket, key)
         version = (om.latest.version + 1) if om.latest else 1
         self._pending[(bucket, key, region, version)] = now
         self.op_log.append(
@@ -155,11 +185,20 @@ class MetadataServer:
             om.versions.append(vm)
             om.versions.sort(key=lambda v: v.version)
             if not self.versioning and len(om.versions) > 1:
-                om.versions = om.versions[-1:]       # last-writer-wins
+                # Last-writer-wins: stale versions' replicas end here (§4.4).
+                for old_vm in om.versions[:-1]:
+                    for r in old_vm.replicas:
+                        if self.ledger is not None:
+                            self.ledger.on_replica_drop(
+                                bucket, key, r, now, version=old_vm.version)
+                om.versions = om.versions[-1:]
         pinned = placement.pinned
         vm.replicas[region] = ReplicaMeta(
             region, COMMITTED, now, now, float("inf"), pinned, etag, size
         )
+        if self.ledger is not None:
+            self.ledger.on_replica_commit(bucket, key, region, size, pinned,
+                                          now, version=version)
         self.op_log.append(
             dict(op="complete_upload", bucket=bucket, key=key, region=region,
                  version=version, t=now)
@@ -198,14 +237,27 @@ class MetadataServer:
             if vm is None:
                 raise ApiError("NoSuchVersion",
                                f"{bucket}/{key} has no version {version}")
-        committed = {
-            r: (float("inf") if m.pinned else m.expire)
-            for r, m in vm.replicas.items() if m.status == COMMITTED
-        }
+        committed = self._holders_of(vm)
         if not committed:
             raise ApiError("NoSuchKey", f"{bucket}/{key} has no committed replica")
         src, hit = choose_get_source(committed, region, now, self.cost)
         return vm, src, hit
+
+    @staticmethod
+    def _holders_of(vm: VersionMeta) -> Dict[str, float]:
+        return {
+            r: (float("inf") if m.pinned else m.expire)
+            for r, m in vm.replicas.items() if m.status == COMMITTED
+        }
+
+    def holders(self, bucket: str, key: str) -> Dict[str, float]:
+        """{region: expiry} over committed replicas of the latest version
+        (``inf`` for pinned) -- the map both §2.3 GET routing and policy
+        ``ttl_on_access`` consume; identical to ``Simulator.holders``."""
+        om = self.objects.get((bucket, key))
+        if om is None or om.latest is None:
+            return {}
+        return self._holders_of(om.latest)
 
     def record_get(
         self, bucket: str, key: str, region: str, size: int, hit: bool,
@@ -222,39 +274,56 @@ class MetadataServer:
 
     def commit_replica(
         self, bucket: str, key: str, region: str, size: int, etag: str,
-        now: Optional[float] = None,
+        now: Optional[float] = None, ttl: Optional[float] = None,
     ) -> ReplicaMeta:
-        """Register a replicate-on-read copy with its adaptive TTL (§3.3.1)."""
+        """Register a replicate-on-read copy with its adaptive TTL (§3.3.1).
+        An explicit ``ttl`` overrides the built-in controller -- that is how a
+        pluggable :class:`~repro.core.policies.Policy` drives the live plane
+        (see ``VirtualStore(policy=...)``)."""
         now = time.time() if now is None else now
         om = self.objects[(bucket, key)]
         vm = om.latest
-        holders = {
-            r: (float("inf") if m.pinned else m.expire)
-            for r, m in vm.replicas.items()
-            if m.status == COMMITTED
-        }
-        ttl = self._object_ttl(bucket, region, holders, now)
+        if ttl is None:
+            ttl = self._object_ttl(bucket, region, self._holders_of(vm), now)
         pinned = resolve_put_placement(self.mode, om.base_region, region).pinned
         rm = ReplicaMeta(region, COMMITTED, now, now, ttl, pinned, etag, size)
         vm.replicas[region] = rm
+        if self.ledger is not None:
+            self.ledger.on_replica_commit(bucket, key, region, size, pinned,
+                                          now, version=vm.version)
         return rm
 
     def touch_replica(self, bucket: str, key: str, region: str,
-                      now: Optional[float] = None) -> None:
-        """TTL reset on access (§3.2.1)."""
+                      now: Optional[float] = None,
+                      ttl: Optional[float] = None) -> None:
+        """TTL reset on access (§3.2.1); explicit ``ttl`` = policy override."""
         now = time.time() if now is None else now
         om = self.objects[(bucket, key)]
         vm = om.latest
         rm = vm.replicas.get(region)
         if rm is None:
             return
-        holders = {
-            r: (float("inf") if m.pinned else m.expire)
-            for r, m in vm.replicas.items() if m.status == COMMITTED
-        }
+        if ttl is None and not rm.pinned:
+            ttl = self._object_ttl(bucket, region, self._holders_of(vm), now)
         rm.last_access = now
-        if not rm.pinned:
-            rm.ttl = self._object_ttl(bucket, region, holders, now)
+        if not rm.pinned and ttl is not None:
+            rm.ttl = ttl
+
+    def drop_replica(self, bucket: str, key: str, region: str,
+                     now: Optional[float] = None,
+                     count_eviction: bool = False) -> Optional[int]:
+        """Forget one replica (policy-driven eviction, read-repair).  Returns
+        the version whose physical blob the caller should DELETE, or None."""
+        now = time.time() if now is None else now
+        om = self.objects.get((bucket, key))
+        vm = om.latest if om is not None else None
+        if vm is None or vm.replicas.pop(region, None) is None:
+            return None
+        if self.ledger is not None:
+            self.ledger.on_replica_drop(bucket, key, region, now,
+                                        count_eviction=count_eviction,
+                                        version=vm.version)
+        return vm.version
 
     def _object_ttl(self, bucket: str, region: str, holders: Dict[str, float],
                     now: float) -> float:
@@ -272,25 +341,53 @@ class MetadataServer:
     def scan_expired(self, now: Optional[float] = None) -> List[Tuple[str, str, str, int]]:
         """Return (bucket, key, region, version) of replicas to DELETE.  The
         caller (proxy / lifecycle worker) performs the physical deletes; we
-        only mutate metadata -- "no data transfer occurs" (§4.2)."""
+        only mutate metadata -- "no data transfer occurs" (§4.2).
+
+        Expired replicas of one object are processed in (expiry, region)
+        order -- the order the simulator's lazy expiration heap pops them --
+        so the survivor under the sole-copy guard is the same in both planes.
+        In FP mode the sole surviving copy is never evicted: its expiry is
+        re-armed instead (§3.2.1), again mirroring the simulator.
+        """
         now = time.time() if now is None else now
         out = []
         for (bucket, key), om in self.objects.items():
             for vm in om.versions:
-                alive = [m for m in vm.replicas.values() if m.status == COMMITTED]
-                for r, m in list(vm.replicas.items()):
-                    if m.pinned or m.status != COMMITTED:
-                        continue
-                    if m.expire <= now and len(alive) > 1:
-                        del vm.replicas[r]
-                        alive.remove(m)
-                        out.append((bucket, key, r, vm.version))
+                expired = sorted(
+                    (m for m in vm.replicas.values()
+                     if m.status == COMMITTED and not m.pinned
+                     and m.expire <= now),
+                    key=lambda m: (m.expire, m.region),
+                )
+                for m in expired:
+                    alive = sum(1 for x in vm.replicas.values()
+                                if x.status == COMMITTED)
+                    if alive > self.min_fp_copies:
+                        del vm.replicas[m.region]
+                        if self.ledger is not None:
+                            self.ledger.on_replica_drop(
+                                bucket, key, m.region, m.expire,
+                                count_eviction=True, version=vm.version)
+                        out.append((bucket, key, m.region, vm.version))
+                    elif self.mode == "FP":
+                        # Sole copy: re-arm in max(ttl, 1h) steps until the
+                        # expiry clears `now` (keep paying storage, §3.2.1).
+                        while m.expire <= now:
+                            m.last_access += max(m.ttl, 3600.0)
         return out
 
-    def delete_object(self, bucket: str, key: str) -> List[Tuple[str, int]]:
+    def delete_object(self, bucket: str, key: str,
+                      now: Optional[float] = None) -> List[Tuple[str, int]]:
+        now = time.time() if now is None else now
         om = self.objects.pop((bucket, key), None)
         if om is None:
             return []
+        self._index_remove(bucket, key)
+        if self.ledger is not None:
+            for vm in om.versions:
+                for m in vm.replicas.values():
+                    self.ledger.on_replica_drop(bucket, key, m.region, now,
+                                                version=vm.version)
         return [
             (m.region, vm.version)
             for vm in om.versions
@@ -298,10 +395,17 @@ class MetadataServer:
         ]
 
     def list_objects(self, bucket: str, prefix: str = "") -> List[ObjectMeta]:
-        return [
-            om for (b, k), om in sorted(self.objects.items())
-            if b == bucket and k.startswith(prefix)
-        ]
+        """Objects of ``bucket`` under ``prefix``, in key order, straight off
+        the per-bucket sorted index (O(log N + matches), not O(N log N))."""
+        keys = self._key_index.get(bucket)
+        if keys is None:
+            return []
+        i = bisect.bisect_left(keys, prefix)
+        out: List[ObjectMeta] = []
+        while i < len(keys) and keys[i].startswith(prefix):
+            out.append(self.objects[(bucket, keys[i])])
+            i += 1
+        return out
 
     def head_object(self, bucket: str, key: str) -> ObjectMeta:
         om = self.objects.get((bucket, key))
@@ -349,6 +453,10 @@ class MetadataServer:
                     )
                 )
             ms.objects[(om.bucket, om.key)] = om
+        for bucket in ms.buckets:
+            ms._key_index.setdefault(bucket, [])
+        for (bucket, key) in ms.objects:
+            ms._index_add(bucket, key)
         return ms
 
     def reconcile(self, backends: Dict[str, "object"]) -> int:
@@ -364,6 +472,7 @@ class MetadataServer:
                     if om is None:
                         om = ObjectMeta(bucket, h.key, region, [])
                         self.objects[(bucket, h.key)] = om
+                        self._index_add(bucket, h.key)
                     if not om.versions:
                         om.versions.append(
                             VersionMeta(1, h.size, h.etag, h.last_modified, {})

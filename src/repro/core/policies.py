@@ -470,7 +470,15 @@ class SkyStorePolicy(Policy):
                 self.ctl.set_last_snapshot(bkey, region, ages, sizes)
 
 
+#: Accepted spelling variants (paper text vs. registry names).
+POLICY_ALIASES = {
+    "teven": "t_even",
+    "aws_multi_region": "aws_mrb",
+}
+
+
 def make_policy(name: str, cost: CostModel, **kw) -> Policy:
+    name = POLICY_ALIASES.get(name, name)
     table = {
         "always_evict": AlwaysEvict,
         "always_store": AlwaysStore,

@@ -1,0 +1,418 @@
+"""Differential trace replay: simulator vs. live plane, diffed (§3.2, §5).
+
+SkyStore's evaluation rests on a cost simulator whose routing semantics are
+claimed to match the live serving path.  PR 1 unified the *op language*
+(:mod:`repro.core.api`); this module closes the loop by *verifying* the
+claim: the same :class:`~repro.core.traces.Trace` is pushed through
+
+  * the :class:`~repro.core.simulator.Simulator` (event-driven, sizes only),
+  * a live :class:`~repro.core.virtual_store.VirtualStore` over
+    :class:`~repro.core.backends.InMemoryBackend` regions, driven under
+    virtual time with real bytes, the policy plugged into the live decision
+    surface, and a :class:`~repro.core.ledger.CostLedger` charging the same
+    :class:`~repro.core.costmodel.CostModel` per request,
+
+and every observable is diffed: per-GET routing decisions (source region +
+hit/miss), final replica holder sets, op/hit/eviction/replication counters
+(exact), and dollar cost components (storage / base storage / network / ops,
+to a relative tolerance).  Zero divergence is the invariant every policy PR
+must preserve; ``tests/golden/replay/*.json`` pins the absolute numbers.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.core.replay                  # run + table
+    PYTHONPATH=src python -m repro.core.replay --update-golden  # refresh fixtures
+    PYTHONPATH=src python -m repro.core.replay --check-golden   # CI drift gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .api import ApiError, GetRequest, PutRequest
+from .backends import InMemoryBackend
+from .costmodel import CostModel, pick_regions
+from .ledger import CostLedger, CostReport
+from .metadata import COMMITTED, MetadataServer
+from .policies import SPANStore, make_policy
+from .simulator import Simulator, build_epoch_summaries, build_oracle
+from .traces import Trace
+from .virtual_store import VirtualStore
+from .workloads import make_workload
+
+DAY = 24 * 3600.0
+
+#: Default cross-plane cost agreement tolerance (relative).
+COST_RTOL = 1e-6
+#: Golden-fixture regression tolerance (same machine class, tighter).
+GOLDEN_RTOL = 1e-9
+
+#: The policy x workload matrix pinned by the golden regression suite.
+GOLDEN_POLICIES = ("always_evict", "always_store", "t_even", "ewma",
+                   "ttl_cc", "skystore", "spanstore", "aws_mrb")
+GOLDEN_WORKLOADS = ("zipfian", "hotspot_shift", "write_heavy")
+GOLDEN_SEED = 7
+
+
+# ---------------------------------------------------------------------------
+# Diff result
+# ---------------------------------------------------------------------------
+
+def rel_delta(a: float, b: float) -> float:
+    m = max(abs(a), abs(b))
+    return abs(a - b) / m if m > 0 else 0.0
+
+
+@dataclasses.dataclass
+class DiffReport:
+    """Everything the two planes disagreed on (ideally: nothing)."""
+
+    policy: str
+    workload: str
+    mode: str
+    n_events: int
+    n_get_checked: int
+    placement_mismatches: List[dict]
+    holder_mismatches: List[dict]
+    counter_diffs: Dict[str, Tuple[int, int]]       # name -> (sim, live)
+    sim_costs: Dict[str, float]
+    live_costs: Dict[str, float]
+    sim_counters: Dict[str, int]
+
+    @property
+    def n_placement_divergence(self) -> int:
+        return len(self.placement_mismatches)
+
+    @property
+    def n_holder_divergence(self) -> int:
+        return len(self.holder_mismatches)
+
+    @property
+    def max_rel_cost_delta(self) -> float:
+        return max(
+            (rel_delta(self.sim_costs[k], self.live_costs[k])
+             for k in self.sim_costs),
+            default=0.0,
+        )
+
+    def ok(self, tol: float = COST_RTOL) -> bool:
+        return (not self.placement_mismatches
+                and not self.holder_mismatches
+                and not self.counter_diffs
+                and self.max_rel_cost_delta <= tol)
+
+    def to_json(self) -> dict:
+        return {
+            "policy": self.policy,
+            "workload": self.workload,
+            "mode": self.mode,
+            "n_events": self.n_events,
+            "n_get_checked": self.n_get_checked,
+            "divergence": {
+                "placement": self.n_placement_divergence,
+                "holders": self.n_holder_divergence,
+                "counters": len(self.counter_diffs),
+            },
+            "max_rel_cost_delta": self.max_rel_cost_delta,
+            "sim": self.sim_costs,
+            "live": self.live_costs,
+            "counters": self.sim_counters,
+        }
+
+    def summary_line(self) -> str:
+        status = "OK " if self.ok() else "DIVERGED"
+        return (f"{status} {self.workload:14s} {self.policy:13s} "
+                f"mode={self.mode} gets={self.n_get_checked} "
+                f"placement_diff={self.n_placement_divergence} "
+                f"holder_diff={self.n_holder_divergence} "
+                f"counter_diff={len(self.counter_diffs)} "
+                f"max_rel_cost_delta={self.max_rel_cost_delta:.2e} "
+                f"sim_total=${self.sim_costs['total']:.6f}")
+
+
+# ---------------------------------------------------------------------------
+# Plane runners
+# ---------------------------------------------------------------------------
+
+def run_sim_plane(
+    trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
+    scan_interval: float = DAY, **policy_kw,
+) -> Tuple[CostReport, List[Tuple], Dict]:
+    policy = make_policy(policy_name, cost, **policy_kw)
+    sim = Simulator(cost, policy, mode=mode, scan_interval=scan_interval,
+                    track_decisions=True)
+    report = sim.run(trace)
+    return report, sim.decisions, sim.replica_holders()
+
+
+def run_live_plane(
+    trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
+    scan_interval: float = DAY, backends: Optional[Dict] = None, **policy_kw,
+) -> Tuple[CostReport, List[Tuple], Dict]:
+    """Drive the live VirtualStore through the trace under virtual time,
+    mirroring ``Simulator.run``'s maintenance schedule step for step.
+    Pass ``backends`` to inspect physical traffic counters afterwards."""
+    policy = make_policy(policy_name, cost, **policy_kw)
+    mode = getattr(policy, "mode", None) or mode
+    horizon = trace.duration
+    ledger = CostLedger(cost, policy=policy.name, mode=mode, horizon=horizon)
+    meta = MetadataServer(cost, mode=mode, versioning=False, ledger=ledger)
+    if backends is None:
+        backends = {r: InMemoryBackend(r) for r in cost.region_names()}
+    store = VirtualStore(cost, backends, meta, mode=mode, policy=policy,
+                         ledger=ledger)
+    for bucket in trace.buckets:
+        store.create_bucket(bucket)
+
+    policy.reset()
+    if policy.requires_oracle:
+        policy.oracle = build_oracle(trace)
+    span_epochs = None
+    if isinstance(policy, SPANStore):
+        span_epochs = build_epoch_summaries(trace, policy.epoch)
+
+    decisions: List[Tuple] = []
+    next_tick = scan_interval
+    epoch_idx = -1
+    for req in trace.iter_requests():
+        t = float(req.at)
+        while next_tick <= t:
+            store.policy_tick(next_tick)
+            next_tick += scan_interval
+        if span_epochs is not None:
+            e = int(t // policy.epoch)
+            if e != epoch_idx:
+                epoch_idx = e
+                gets, puts = span_epochs.get(e, ({}, {}))
+                policy.solve_epoch(gets, puts)
+                _apply_spanstore_live(store, policy, t)
+        store.run_eviction_scan(t)
+        if isinstance(req, PutRequest) and req.body is None:
+            req = dataclasses.replace(req, body=b"\x00" * req.nbytes, size=None)
+        try:
+            resp = store.dispatch(req)
+        except ApiError as e:
+            # The simulator silently skips requests at missing keys; a live
+            # error on the same event is a divergence to report, not a crash
+            # (hand-authored traces can violate the generator invariants).
+            decisions.append((t, type(req).__name__, getattr(req, "region", None),
+                              f"error:{e.code}", False))
+            continue
+        if isinstance(req, GetRequest):
+            decisions.append((t, store._obj_id(req.key), req.region,
+                              resp.source_region, resp.hit))
+    store.run_eviction_scan(horizon)
+    report = ledger.finalize(horizon, meta)
+    return report, decisions, _live_holders(meta)
+
+
+def _apply_spanstore_live(store: VirtualStore, policy: SPANStore,
+                          now: float) -> None:
+    """Epoch boundary on the live plane: drop replicas outside the solver's
+    new sets (keeping >= min copies) -- ``Simulator._apply_spanstore_sets``."""
+    for (bucket, key), om in list(store.meta.objects.items()):
+        rs = policy.replica_sets.get(bucket)
+        vm = om.latest
+        if not rs or vm is None:
+            continue
+        keep = set(rs)
+        for r in list(vm.replicas):
+            if (r not in keep
+                    and vm.replicas[r].status == COMMITTED
+                    and store._committed_count(vm) > store.min_fp_copies):
+                store._evict_replica(bucket, key, r, now, count_eviction=True)
+
+
+def _live_holders(meta: MetadataServer) -> Dict:
+    out = {}
+    for (_b, key), om in meta.objects.items():
+        vm = om.latest
+        if vm is None:
+            continue
+        regs = tuple(sorted(
+            r for r, m in vm.replicas.items() if m.status == COMMITTED))
+        if regs:
+            out[VirtualStore._obj_id(key)] = regs
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The differential driver
+# ---------------------------------------------------------------------------
+
+_COMPARED_COUNTERS = ("n_get", "n_put", "n_head", "n_list", "n_hit",
+                      "n_miss", "n_evictions", "n_replications")
+
+
+def replay_differential(
+    trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
+    scan_interval: float = DAY, workload: str = "", max_mismatch_detail: int = 10,
+    **policy_kw,
+) -> DiffReport:
+    """Replay ``trace`` through both planes and diff every observable."""
+    sim_rep, sim_dec, sim_holders = run_sim_plane(
+        trace, cost, policy_name, mode, scan_interval, **policy_kw)
+    live_rep, live_dec, live_holders = run_live_plane(
+        trace, cost, policy_name, mode, scan_interval, **policy_kw)
+
+    placement: List[dict] = []
+    n_checked = min(len(sim_dec), len(live_dec))
+    if len(sim_dec) != len(live_dec):
+        longer = sim_dec if len(sim_dec) > len(live_dec) else live_dec
+        placement.append({"at": None, "why": "decision count",
+                          "sim": len(sim_dec), "live": len(live_dec),
+                          "unmatched": longer[n_checked:n_checked
+                                              + max_mismatch_detail]})
+    for i in range(n_checked):
+        if sim_dec[i] != live_dec[i]:
+            if len(placement) < max_mismatch_detail:
+                t, oid, region, src, hit = sim_dec[i]
+                lt, loid, lregion, lsrc, lhit = live_dec[i]
+                placement.append({
+                    "at": t, "obj": oid, "region": region,
+                    "sim": {"src": src, "hit": hit},
+                    "live": {"src": lsrc, "hit": lhit},
+                })
+            else:
+                placement.append({"at": sim_dec[i][0], "why": "elided"})
+
+    holder_mismatches: List[dict] = []
+    for oid in sorted(set(sim_holders) | set(live_holders), key=str):
+        a, b = sim_holders.get(oid), live_holders.get(oid)
+        if a != b and len(holder_mismatches) < max_mismatch_detail:
+            holder_mismatches.append({"obj": oid, "sim": a, "live": b})
+
+    counter_diffs = {
+        k: (sim_rep.counters()[k], live_rep.counters()[k])
+        for k in _COMPARED_COUNTERS
+        if sim_rep.counters()[k] != live_rep.counters()[k]
+    }
+
+    return DiffReport(
+        policy=sim_rep.policy,
+        workload=workload or trace.name,
+        mode=sim_rep.mode,
+        n_events=len(trace.events),
+        n_get_checked=n_checked,
+        placement_mismatches=placement,
+        holder_mismatches=holder_mismatches,
+        counter_diffs=counter_diffs,
+        sim_costs=sim_rep.components(),
+        live_costs=live_rep.components(),
+        sim_counters=sim_rep.counters(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Golden-cost regression fixtures
+# ---------------------------------------------------------------------------
+
+def golden_path(golden_dir: str, workload: str, policy: str) -> str:
+    return os.path.join(golden_dir, f"{workload}__{policy}.json")
+
+
+def run_golden_matrix(
+    policies: Sequence[str] = GOLDEN_POLICIES,
+    workloads: Sequence[str] = GOLDEN_WORKLOADS,
+    seed: int = GOLDEN_SEED,
+    n_regions: int = 3,
+) -> List[DiffReport]:
+    cost = pick_regions(n_regions)
+    out = []
+    for wl in workloads:
+        trace = make_workload(wl, cost.region_names(), seed=seed)
+        for pol in policies:
+            out.append(replay_differential(trace, cost, pol, workload=wl))
+    return out
+
+
+def write_golden(reports: List[DiffReport], golden_dir: str) -> List[str]:
+    os.makedirs(golden_dir, exist_ok=True)
+    paths = []
+    for r in reports:
+        p = golden_path(golden_dir, r.workload, r.policy)
+        with open(p, "w") as f:
+            json.dump(r.to_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        paths.append(p)
+    return paths
+
+
+def check_golden(reports: List[DiffReport], golden_dir: str,
+                 rtol: float = GOLDEN_RTOL) -> List[str]:
+    """Compare fresh reports against checked-in fixtures; returns a list of
+    human-readable problems (empty = green)."""
+    problems = []
+    for r in reports:
+        p = golden_path(golden_dir, r.workload, r.policy)
+        if not os.path.exists(p):
+            problems.append(f"missing fixture {p}")
+            continue
+        with open(p) as f:
+            want = json.load(f)
+        got = r.to_json()
+        for plane in ("sim", "live"):
+            for k, v in want[plane].items():
+                if rel_delta(v, got[plane][k]) > rtol:
+                    problems.append(
+                        f"{r.workload}/{r.policy}: {plane}.{k} drifted "
+                        f"{v} -> {got[plane][k]}")
+        if got["counters"] != want["counters"]:
+            problems.append(f"{r.workload}/{r.policy}: counters drifted "
+                            f"{want['counters']} -> {got['counters']}")
+        if not r.ok():
+            problems.append(f"{r.workload}/{r.policy}: planes diverged: "
+                            f"{r.summary_line()}")
+    return problems
+
+
+def default_golden_dir() -> str:
+    """tests/golden/replay, resolved relative to the repo root."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    return os.path.join(root, "tests", "golden", "replay")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Differential trace replay: Simulator vs live VirtualStore")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="regenerate tests/golden/replay fixtures")
+    ap.add_argument("--check-golden", action="store_true",
+                    help="fail (exit 1) if fresh runs drift from fixtures")
+    ap.add_argument("--golden-dir", default=default_golden_dir())
+    ap.add_argument("--policies", nargs="*", default=list(GOLDEN_POLICIES))
+    ap.add_argument("--workloads", nargs="*", default=list(GOLDEN_WORKLOADS))
+    ap.add_argument("--seed", type=int, default=GOLDEN_SEED)
+    ap.add_argument("--regions", type=int, default=3, choices=(3, 6, 9))
+    args = ap.parse_args(argv)
+
+    reports = run_golden_matrix(args.policies, args.workloads, args.seed,
+                                args.regions)
+    for r in reports:
+        print(r.summary_line())
+    diverged = [r for r in reports if not r.ok()]
+
+    if args.update_golden:
+        paths = write_golden(reports, args.golden_dir)
+        print(f"wrote {len(paths)} fixtures under {args.golden_dir}")
+    if args.check_golden:
+        problems = check_golden(reports, args.golden_dir)
+        for p in problems:
+            print("DRIFT:", p)
+        if problems:
+            return 1
+    if diverged:
+        print(f"{len(diverged)} policy/workload pairs diverged")
+        return 1
+    print(f"all {len(reports)} policy/workload pairs agree "
+          f"(placement exact, costs within {COST_RTOL:g})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,15 +38,18 @@ from .api import (
     ApiError,
     DeleteObjectRequest,
     GetRequest,
+    HeadRequest,
+    ListRequest,
     PutRequest,
     Request,
     choose_get_source,
     resolve_put_placement,
 )
 from .costmodel import CostModel
+from .ledger import CostReport  # noqa: F401  (re-export; CostReport moved)
 from .policies import GetContext, Oracle, Policy, SPANStore
 
-OP_PUT, OP_GET, OP_DELETE = 0, 1, 2
+OP_PUT, OP_GET, OP_DELETE, OP_HEAD, OP_LIST = 0, 1, 2, 3, 4
 INF = float("inf")
 
 
@@ -70,61 +73,6 @@ class ObjectState:
     version: int = 0
 
 
-@dataclasses.dataclass
-class CostReport:
-    policy: str
-    mode: str
-    storage: float = 0.0        # evictable (cache-side) replica storage
-    storage_base: float = 0.0   # pinned FB base replicas -- identical across
-    # policies by construction (§3.1 compares cache-side cost + egress only)
-    network: float = 0.0
-    ops: float = 0.0
-    n_get: int = 0
-    n_put: int = 0
-    n_hit: int = 0
-    n_miss: int = 0
-    n_evictions: int = 0
-    n_replications: int = 0
-    get_latency_ms: List[float] = dataclasses.field(default_factory=list)
-    put_latency_ms: List[float] = dataclasses.field(default_factory=list)
-
-    @property
-    def total(self) -> float:
-        """Full bill, base replicas included."""
-        return self.storage + self.storage_base + self.network + self.ops
-
-    @property
-    def policy_cost(self) -> float:
-        """The §3.1 objective: costs the policy can influence (cache-side
-        storage + network + ops).  FB base storage is constant across
-        policies and excluded; in FP mode there are no pinned replicas and
-        ``policy_cost == total``."""
-        return self.storage + self.network + self.ops
-
-    def latency_stats(self) -> Dict[str, float]:
-        out = {}
-        for name, xs in (("get", self.get_latency_ms), ("put", self.put_latency_ms)):
-            if xs:
-                a = np.asarray(xs)
-                out[f"{name}_avg"] = float(a.mean())
-                out[f"{name}_p90"] = float(np.percentile(a, 90))
-                out[f"{name}_p99"] = float(np.percentile(a, 99))
-        return out
-
-    def summary(self) -> Dict[str, float]:
-        return {
-            "policy": self.policy,
-            "mode": self.mode,
-            "total": self.total,
-            "policy_cost": self.policy_cost,
-            "storage": self.storage,
-            "storage_base": self.storage_base,
-            "network": self.network,
-            "ops": self.ops,
-            "hit_rate": self.n_hit / max(self.n_get, 1),
-        }
-
-
 class Simulator:
     def __init__(
         self,
@@ -134,6 +82,7 @@ class Simulator:
         scan_interval: float = 24 * 3600.0,
         charge_ops: bool = True,
         track_latency: bool = False,
+        track_decisions: bool = False,
         min_fp_copies: int = 1,
     ) -> None:
         if mode not in ("FB", "FP"):
@@ -144,6 +93,10 @@ class Simulator:
         self.scan_interval = scan_interval
         self.charge_ops = charge_ops
         self.track_latency = track_latency
+        self.track_decisions = track_decisions
+        #: (t, oid, landing region, source region, hit) per GET, for the
+        #: differential replay harness (repro.core.replay).
+        self.decisions: List[Tuple[float, int, str, str, bool]] = []
         self.min_fp_copies = min_fp_copies
 
         self.objects: Dict[int, ObjectState] = {}
@@ -296,6 +249,8 @@ class Simulator:
         size = obj.size
         # Same §2.3 routing rule the metadata server uses for live GETs.
         src, hit = choose_get_source(self.holders(obj), region, now, self.cost)
+        if self.track_decisions:
+            self.decisions.append((now, oid, region, src, hit))
         gap_key = (oid, region)
         prev = self._last_get.get(gap_key)
         gap = (now - prev) if prev is not None else None
@@ -332,10 +287,32 @@ class Simulator:
         obj = self.objects.pop(oid, None)
         if obj is None:
             return
-        self._charge_op(next(iter(obj.replicas), "aws:us-east-1") if obj.replicas else
-                        (obj.base_region or self.cost.region_names()[0]), "DELETE")
+        # The issuing region pays the request charge (matches the live plane,
+        # where the client-facing proxy in op.region serves the DELETE).
+        region = op.region or obj.base_region or self.cost.region_names()[0]
+        self._charge_op(region, "DELETE")
         for r in list(obj.replicas):
             self._drop_replica(oid, obj, r, now)
+
+    def _handle_head(self, op: HeadRequest):
+        """HEAD is control-plane only: a per-request charge at the issuing
+        region, no data movement, no TTL reset (§4.2: reset-on-access is a
+        *GET* semantic; metadata reads do not touch replicas).  A HEAD at a
+        missing key is skipped uncharged, like GET (the live plane 404s
+        before billing)."""
+        if self.objects.get(int(op.key)) is None:
+            return
+        self.report.n_head += 1
+        if op.region is not None:
+            self._charge_op(op.region, "HEAD")
+
+    def _handle_list(self, op: ListRequest):
+        """LIST: charged in S3's PUT/COPY/POST/LIST request tier; served
+        entirely from the metadata table (§4.2), so no transfer and no
+        placement effect."""
+        self.report.n_list += 1
+        if op.region is not None:
+            self._charge_op(op.region, "LIST")
 
     # -- main loop -------------------------------------------------------------------
     def run(self, trace) -> CostReport:
@@ -378,7 +355,17 @@ class Simulator:
         PutRequest: "_handle_put",
         GetRequest: "_handle_get",
         DeleteObjectRequest: "_handle_delete",
+        HeadRequest: "_handle_head",
+        ListRequest: "_handle_list",
     }
+
+    def replica_holders(self) -> Dict[int, Tuple[str, ...]]:
+        """{oid: sorted committed-replica regions} -- the placement state the
+        differential replay harness compares against the live metadata."""
+        return {
+            oid: tuple(sorted(obj.replicas))
+            for oid, obj in self.objects.items() if obj.replicas
+        }
 
     def _apply_spanstore_sets(self, now: float) -> None:
         """Epoch boundary: drop replicas outside the new solver sets (FP, >=1)."""

@@ -39,8 +39,10 @@ from typing import Dict, Iterator, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .api import DeleteObjectRequest, GetRequest, PutRequest
-from .simulator import OP_DELETE, OP_GET, OP_PUT
+from .api import (
+    DeleteObjectRequest, GetRequest, HeadRequest, ListRequest, PutRequest,
+)
+from .simulator import OP_DELETE, OP_GET, OP_HEAD, OP_LIST, OP_PUT
 
 DAY = 24 * 3600.0
 MONTH = 30 * DAY
@@ -70,23 +72,30 @@ class Trace:
 
     def iter_requests(
         self,
-    ) -> Iterator[Union[PutRequest, GetRequest, DeleteObjectRequest]]:
+    ) -> Iterator[Union[PutRequest, GetRequest, DeleteObjectRequest,
+                        HeadRequest, ListRequest]]:
         """Replay the trace as the typed :mod:`repro.core.api` request
         objects every :class:`~repro.core.api.ObjectStoreAPI` implementation
         consumes -- the simulator and the live store share one op language.
-        Object ids become string keys; event time rides in ``at``."""
+        Object ids become string keys; event time rides in ``at``.  HEAD and
+        LIST events carry the issuing region for per-request op charges."""
         ev = self.events
         for i in range(len(ev)):
             t = float(ev["t"][i])
             op = int(ev["op"][i])
-            key = str(int(ev["obj"][i]))
             region = self.regions[int(ev["region"][i])]
             bucket = self.buckets[int(ev["bucket"][i])]
+            if op == OP_LIST:
+                yield ListRequest(bucket, region=region, at=t)
+                continue
+            key = str(int(ev["obj"][i]))
             if op == OP_PUT:
                 yield PutRequest(bucket, key, region,
                                  size=int(ev["size"][i]), at=t)
             elif op == OP_GET:
                 yield GetRequest(bucket, key, region, at=t)
+            elif op == OP_HEAD:
+                yield HeadRequest(bucket, key, region=region, at=t)
             else:
                 yield DeleteObjectRequest(bucket, key, region, at=t)
 

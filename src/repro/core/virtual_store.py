@@ -69,7 +69,9 @@ from .api import (
 )
 from .backends import Backend, HeadResult
 from .costmodel import CostModel
+from .ledger import CostLedger
 from .metadata import COMMITTED, MetadataServer
+from .policies import GetContext, Policy
 
 #: Key prefix for internal blobs (multipart spill space, metadata backups).
 MPU_PREFIX = "__skystore_mpu__/"
@@ -112,16 +114,52 @@ class VirtualStore:
         meta: Optional[MetadataServer] = None,
         mode: str = "FB",
         clock=None,
+        policy: Optional[Policy] = None,
+        ledger: Optional[CostLedger] = None,
+        min_fp_copies: int = 1,
     ) -> None:
         missing = set(cost.region_names()) - set(backends)
         if missing:
             raise ValueError(f"backends missing for regions {sorted(missing)}")
         self.cost = cost
         self.backends = backends
-        self.meta = meta or MetadataServer(cost, mode=mode)
+        #: A pluggable placement policy (any Simulator policy).  When set, the
+        #: live GET/PUT paths consult it for cache-on-read, TTL, and
+        #: replicate-on-write decisions instead of the built-in adaptive-TTL
+        #: controller -- the same decision surface the Simulator drives, so a
+        #: trace replayed through both planes takes identical placements
+        #: (verified by repro.core.replay).
+        self.policy = policy
+        self.mode = getattr(policy, "mode", None) or mode
+        #: Optional live-plane cost accounting (repro.core.ledger).
+        self.ledger = ledger
+        self.min_fp_copies = min_fp_copies
+        # Policy mode runs last-writer-wins: the simulator models a single
+        # live version, so superseded replicas must drop on overwrite.
+        self.meta = meta or MetadataServer(cost, mode=self.mode, ledger=ledger,
+                                           versioning=policy is None,
+                                           min_fp_copies=min_fp_copies)
+        if policy is not None:
+            # The hit-path guards here and the scan-time guards in the
+            # metadata server must see one consistent configuration.
+            if self.meta.versioning:
+                raise ValueError("policy-driven VirtualStore requires a "
+                                 "MetadataServer(versioning=False) (LWW)")
+            if self.meta.mode != self.mode:
+                raise ValueError(f"MetadataServer mode {self.meta.mode!r} != "
+                                 f"effective store mode {self.mode!r}")
+            if self.meta.min_fp_copies != self.min_fp_copies:
+                raise ValueError("MetadataServer.min_fp_copies "
+                                 f"{self.meta.min_fp_copies} != store's "
+                                 f"{self.min_fp_copies}")
+        if ledger is not None and self.meta.ledger is None:
+            self.meta.ledger = ledger
         self.transfers = TransferLog()
         self._clock = clock or time.time
         self._mpu: Dict[str, _MultipartUpload] = {}
+        # policy-mode bookkeeping, mirroring Simulator._last_get/_open_last
+        self._last_get: Dict[Tuple[str, str, str], float] = {}
+        self._open_last: Dict[Tuple[str, str], Dict[object, Tuple[float, float]]] = {}
 
     # -- the unified op entry point ------------------------------------------
     def dispatch(self, op: Request):
@@ -155,12 +193,81 @@ class VirtualStore:
             raise ApiError("InvalidRequest", "PUT outside simulation needs a body")
         now = self._now(op)
         data = op.body
+        if self.policy is not None:
+            return self._policy_put(op, data, now)
+        if self.ledger is not None:
+            self.ledger.count_put()
+            self.ledger.charge_op(op.region, "PUT")
         version = self.meta.begin_upload(op.bucket, op.key, op.region,
                                          len(data), now)
         h = self.backends[op.region].put(op.bucket,
                                          self._pkey(op.key, version), data)
         self.meta.complete_upload(op.bucket, op.key, op.region, version,
                                   len(data), h.etag, now)
+        return PutResponse(version, h.etag)
+
+    def _policy_put(self, op: PutRequest, data: bytes, now: float) -> PutResponse:
+        """Mirror of ``Simulator._handle_put``: write-local commit, §4.4
+        sync-to-base on cross-region overwrite (with a policy TTL on the
+        write-local cache copy), then policy-chosen replication targets.
+
+        Policy mode runs the metadata server in last-writer-wins mode
+        (``versioning=False``) so stale versions drop on overwrite exactly as
+        in the simulator; their physical blobs are deleted here.
+        """
+        size = len(data)
+        oid = self._obj_id(op.key)
+        if self.ledger is not None:
+            self.ledger.count_put()
+            self.ledger.charge_op(op.region, "PUT")
+        # Physical blobs of the version about to be superseded (LWW).
+        om = self.meta.objects.get((op.bucket, op.key))
+        stale = []
+        if om is not None and om.latest is not None:
+            stale = [(r, om.latest.version) for r in om.latest.replicas]
+        version = self.meta.begin_upload(op.bucket, op.key, op.region, size, now)
+        h = self.backends[op.region].put(op.bucket,
+                                         self._pkey(op.key, version), data)
+        self.meta.complete_upload(op.bucket, op.key, op.region, version,
+                                  size, h.etag, now)
+        for r, v in stale:   # v < version always: begin_upload increments
+            self.backends[r].delete(op.bucket, self._pkey(op.key, v))
+        om = self.meta.objects[(op.bucket, op.key)]
+        vm = om.latest
+        base = om.base_region
+        if self.mode == "FB" and op.region != base:
+            # Sync replication keeps the pinned base fresh (§4.4).
+            self.transfers.add(self.cost, op.region, base, size)
+            if self.ledger is not None:
+                self.ledger.charge_transfer(op.region, base, size)
+                self.ledger.charge_op(base, "PUT")
+                self.ledger.count_replication()
+            self.backends[base].put(op.bucket, self._pkey(op.key, version), data)
+            self.meta.commit_replica(op.bucket, op.key, base, size, h.etag,
+                                     now, ttl=float("inf"))
+            # The write-local copy is a cache replica: give it a policy TTL.
+            ctx = GetContext(oid, op.bucket, op.region, base, float(size), now,
+                             hit=True, gap=None)
+            ttl = self.policy.ttl_on_access(
+                ctx, self.meta.holders(op.bucket, op.key))
+            if ttl <= 0:
+                self._evict_replica(op.bucket, op.key, op.region, now)
+            else:
+                self.meta.touch_replica(op.bucket, op.key, op.region, now,
+                                        ttl=ttl)
+        for target in self.policy.replicate_on_write(oid, op.bucket, op.region,
+                                                     float(size), now):
+            if target == op.region or target in vm.replicas:
+                continue
+            self.transfers.add(self.cost, op.region, target, size)
+            if self.ledger is not None:
+                self.ledger.charge_transfer(op.region, target, size)
+                self.ledger.charge_op(target, "PUT")
+                self.ledger.count_replication()
+            self.backends[target].put(op.bucket, self._pkey(op.key, version),
+                                      data)
+            self.meta.commit_replica(op.bucket, op.key, target, size, h.etag,
+                                     now, ttl=float("inf"))
         return PutResponse(version, h.etag)
 
     def _handle_get(self, op: GetRequest) -> GetResponse:
@@ -188,19 +295,31 @@ class VirtualStore:
                 break
             except KeyError:
                 vm.replicas.pop(src, None)       # physical bytes lost
+                if self.ledger is not None:
+                    self.ledger.on_replica_drop(op.bucket, op.key, src, now,
+                                                version=vm.version)
                 if not vm.replicas:
                     raise
-        self.meta.record_get(op.bucket, op.key, op.region, vm.size, hit, now)
-        if hit:
-            self.meta.touch_replica(op.bucket, op.key, op.region, now)
+        if self.policy is not None:
+            self._policy_get_bookkeeping(op, vm, src, hit, full, now)
         else:
-            # replicate-on-read always copies the whole object (a ranged miss
-            # still seeds a full local replica), so egress is the full size
-            self.transfers.add(self.cost, src, op.region, vm.size)
-            h = self.backends[op.region].put(
-                op.bucket, self._pkey(op.key, vm.version), full)
-            self.meta.commit_replica(op.bucket, op.key, op.region, vm.size,
-                                     h.etag, now)
+            if self.ledger is not None:
+                self.ledger.count_get(hit)
+                self.ledger.charge_op(op.region, "GET")
+                if not hit:   # replicate-on-read: egress + a new local copy
+                    self.ledger.charge_transfer(src, op.region, vm.size)
+                    self.ledger.count_replication()
+            self.meta.record_get(op.bucket, op.key, op.region, vm.size, hit, now)
+            if hit:
+                self.meta.touch_replica(op.bucket, op.key, op.region, now)
+            else:
+                # replicate-on-read always copies the whole object (a ranged
+                # miss still seeds a full local replica): egress = full size
+                self.transfers.add(self.cost, src, op.region, vm.size)
+                h = self.backends[op.region].put(
+                    op.bucket, self._pkey(op.key, vm.version), full)
+                self.meta.commit_replica(op.bucket, op.key, op.region, vm.size,
+                                         h.etag, now)
         if body is None:
             body = full if rng is None else full[rng[0]:rng[1] + 1]
         return GetResponse(
@@ -210,12 +329,94 @@ class VirtualStore:
             source_region=src, hit=hit,
         )
 
+    # -- policy-driven placement (the Simulator's decision surface, live) -----
+    @staticmethod
+    def _obj_id(key: str):
+        """Trace object ids are numeric strings; policies key their state by
+        the integer id (as the Simulator does), so both planes index the same
+        statistics.  Non-numeric keys fall back to the key itself."""
+        return int(key) if key.isdigit() else key
+
+    def _committed_count(self, vm) -> int:
+        return sum(1 for m in vm.replicas.values() if m.status == COMMITTED)
+
+    def _evict_replica(self, bucket: str, key: str, region: str, now: float,
+                       count_eviction: bool = False) -> None:
+        version = self.meta.drop_replica(bucket, key, region, now,
+                                         count_eviction=count_eviction)
+        if version is not None:
+            self.backends[region].delete(bucket, self._pkey(key, version))
+
+    def _policy_get_bookkeeping(self, op: GetRequest, vm, src: str, hit: bool,
+                                full: Optional[bytes], now: float) -> None:
+        """Mirror of ``Simulator._handle_get``: observe, then replicate-on-
+        read / TTL-re-arm / evict exactly as the policy dictates."""
+        oid = self._obj_id(op.key)
+        if self.ledger is not None:
+            self.ledger.count_get(hit)
+            self.ledger.charge_op(op.region, "GET")
+        gap_key = (op.bucket, op.key, op.region)
+        prev = self._last_get.get(gap_key)
+        gap = (now - prev) if prev is not None else None
+        ctx = GetContext(oid, op.bucket, op.region, src, float(vm.size), now,
+                         hit, gap)
+        self.policy.observe_get(ctx)
+        holders = self.meta.holders(op.bucket, op.key)
+        if not hit:
+            self.transfers.add(self.cost, src, op.region, vm.size)
+            if self.ledger is not None:
+                self.ledger.charge_transfer(src, op.region, vm.size)
+            if self.policy.cache_on_read(ctx):
+                if self.ledger is not None:
+                    self.ledger.count_replication()
+                ttl = self.policy.ttl_on_access(ctx, holders)
+                if ttl > 0:
+                    if full is None:   # ranged miss still seeds a full copy
+                        full = self.backends[src].get(
+                            op.bucket, self._pkey(op.key, vm.version))
+                    h = self.backends[op.region].put(
+                        op.bucket, self._pkey(op.key, vm.version), full)
+                    self.meta.commit_replica(op.bucket, op.key, op.region,
+                                             vm.size, h.etag, now, ttl=ttl)
+        else:
+            rm = vm.replicas[op.region]
+            if not rm.pinned:
+                ttl = self.policy.ttl_on_access(ctx, holders)
+                if ttl <= 0 and (self.mode != "FP"
+                                 or self._committed_count(vm) > self.min_fp_copies):
+                    self._evict_replica(op.bucket, op.key, op.region, now,
+                                        count_eviction=True)
+                else:
+                    self.meta.touch_replica(op.bucket, op.key, op.region, now,
+                                            ttl=ttl)
+            else:
+                rm.last_access = now
+        self._last_get[gap_key] = now
+        self._open_last.setdefault((op.bucket, op.region), {})[oid] = (
+            now, float(vm.size))
+
+    def last_access_snapshot(self):
+        """Same shape as ``Simulator.last_access_snapshot`` -- consumed by
+        ``Policy.periodic`` (e.g. SkyStore's daily histogram refresh)."""
+        return self._open_last
+
+    def policy_tick(self, now: float) -> None:
+        """One maintenance tick of the policy-driven live plane: the §4.2
+        eviction scan followed by the policy's periodic hook -- the exact
+        sequence ``Simulator.run`` performs at every ``scan_interval``."""
+        self.run_eviction_scan(now)
+        if self.policy is not None:
+            self.policy.periodic(now, self)
+
     def _handle_head(self, op: HeadRequest) -> HeadResponse:
         om = self.meta.head_object(op.bucket, op.key)
         vm = om.latest
         if vm is None:
             raise ApiError("NoSuchKey", f"{op.bucket}/{op.key} not found")
         check_preconditions(vm.etag, op.if_match, op.if_none_match)
+        if self.ledger is not None:
+            self.ledger.count_head()
+            self.ledger.charge_op(op.region, "HEAD")
         return HeadResponse(op.key, vm.size, vm.etag, vm.last_modified,
                             vm.version)
 
@@ -224,6 +425,9 @@ class VirtualStore:
         metadata table (no per-key HEAD round trips)."""
         if op.bucket not in self.meta.buckets:
             raise ApiError("NoSuchBucket", f"no such bucket {op.bucket!r}")
+        if self.ledger is not None:
+            self.ledger.count_list()
+            self.ledger.charge_op(op.region, "LIST")
         start_after = (decode_continuation_token(op.continuation_token)
                        if op.continuation_token else "")
         max_keys = max(0, min(op.max_keys, MAX_LIST_KEYS))
@@ -264,7 +468,12 @@ class VirtualStore:
     def _handle_delete_object(self, op: DeleteObjectRequest) -> Ack:
         if (op.bucket, op.key) not in self.meta.objects:
             raise ApiError("NoSuchKey", f"{op.bucket}/{op.key} not found")
-        for region, version in self.meta.delete_object(op.bucket, op.key):
+        now = self._now(op)
+        if self.ledger is not None:
+            om = self.meta.objects[(op.bucket, op.key)]
+            region = op.region or om.base_region or self.cost.region_names()[0]
+            self.ledger.charge_op(region, "DELETE")
+        for region, version in self.meta.delete_object(op.bucket, op.key, now):
             self.backends[region].delete(op.bucket, self._pkey(op.key, version))
         return Ack()
 
@@ -302,6 +511,10 @@ class VirtualStore:
                 self.meta.touch_replica(op.bucket, op.src_key, op.region, now)
             except KeyError:
                 vm.replicas.pop(op.region, None)   # read-repair (§4.5)
+                if self.ledger is not None:
+                    self.ledger.on_replica_drop(op.bucket, op.src_key,
+                                                op.region, now,
+                                                version=vm.version)
         if data is None:
             data = self._handle_get(
                 GetRequest(op.bucket, op.src_key, op.region, at=op.at)).body

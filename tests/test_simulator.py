@@ -2,9 +2,12 @@ import numpy as np
 import pytest
 
 from repro.core import paper_2region_catalog, pick_regions
-from repro.core.costmodel import GB, SECONDS_PER_MONTH
+from repro.core.api import HeadRequest, ListRequest
+from repro.core.costmodel import GB, SECONDS_PER_MONTH, CostModel, Region
 from repro.core.policies import make_policy
-from repro.core.simulator import OP_GET, OP_PUT, Simulator, run_policy
+from repro.core.simulator import (
+    OP_DELETE, OP_GET, OP_HEAD, OP_LIST, OP_PUT, Simulator, run_policy,
+)
 from repro.core.traces import EVENT_DTYPE, Trace, assign_two_region, generate_trace
 
 DAY = 24 * 3600.0
@@ -107,6 +110,53 @@ def test_skystore_multiregion_runs_all_workloads():
         rep = run_policy(tr, cat, "skystore", mode="FB")
         assert rep.total > 0
         assert rep.n_get > 0
+
+
+def test_head_list_op_charges():
+    """HEAD bills in the GET request tier, LIST in the PUT tier; neither
+    moves data or touches placement (ROADMAP open item)."""
+    cat = paper_2region_catalog()
+    tr = mk_trace(
+        [(0.0, OP_PUT, 1, GB, 0),
+         (1 * DAY, OP_HEAD, 1, GB, 1),
+         (2 * DAY, OP_HEAD, 1, GB, 1),
+         (3 * DAY, OP_LIST, 0, 0, 0)],
+        REGS)
+    rep = run_policy(tr, cat, "always_store", mode="FB")
+    assert rep.n_head == 2 and rep.n_list == 1
+    r0, r1 = (cat.regions[r] for r in REGS)
+    expect = r0.put_price + 2 * r1.get_price + r0.put_price
+    assert rep.ops == pytest.approx(expect, rel=1e-12)
+    assert rep.network == 0.0                 # HEAD/LIST move no bytes
+    assert rep.n_get == 0                     # and are not GETs
+
+
+def test_trace_iter_requests_yields_head_and_list():
+    tr = mk_trace(
+        [(0.0, OP_PUT, 1, GB, 0),
+         (1.0, OP_HEAD, 1, GB, 1),
+         (2.0, OP_LIST, 0, 0, 1)],
+        REGS)
+    reqs = list(tr.iter_requests())
+    assert isinstance(reqs[1], HeadRequest)
+    assert reqs[1].region == REGS[1] and reqs[1].key == "1"
+    assert isinstance(reqs[2], ListRequest)
+    assert reqs[2].region == REGS[1] and reqs[2].bucket == "b0"
+
+
+def test_delete_charged_at_issuing_region():
+    expensive = Region("aws:pricey", 0.023, put_price=1e-3)
+    cheap = Region("aws:cheap", 0.023, put_price=1e-6)
+    cat = CostModel([expensive, cheap],
+                    {("aws:pricey", "aws:cheap"): 0.02,
+                     ("aws:cheap", "aws:pricey"): 0.02})
+    tr = mk_trace(
+        [(0.0, OP_PUT, 1, GB, 1),
+         (DAY, OP_DELETE, 1, 0, 0)],        # DELETE issued from pricey
+        ("aws:pricey", "aws:cheap"))
+    rep = run_policy(tr, cat, "always_store", mode="FB")
+    assert rep.ops == pytest.approx(cheap.put_price + expensive.put_price,
+                                    rel=1e-12)
 
 
 def test_replicate_on_write_policies_pay_upfront():

@@ -1,0 +1,249 @@
+"""TTL edge-semantics coverage (§3.2.1 / §4.4):
+
+  * reset-on-access re-arming -- each GET pushes the replica's expiry out,
+    so closely spaced reads never re-pay egress;
+  * the sole surviving FP copy is never evicted (its expiry is re-armed),
+    in both the simulator and the live metadata server;
+  * pinned-base invariants in FB mode -- the base region is fixed by the
+    first writer, never evicted, and refreshed (not moved) by cross-region
+    overwrites.
+
+Property-style tests run over random access sequences: with hypothesis when
+installed, and via deterministic numpy sampling otherwise (so the properties
+are always exercised).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.backends import InMemoryBackend
+from repro.core.costmodel import CostModel, Region
+from repro.core.metadata import MetadataServer
+from repro.core.policies import make_policy
+from repro.core.simulator import OP_GET, OP_PUT, Simulator
+from repro.core.traces import EVENT_DTYPE, Trace
+from repro.core.virtual_store import VirtualStore
+
+DAY = 24 * 3600.0
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def tiny_catalog() -> CostModel:
+    """Storage $10/GB/month, egress $0.01/GB => T_even = 0.001 month
+    (~43 min): TTLs lapse inside hours-long traces."""
+    regions = [Region("aws:a", 10.0), Region("aws:b", 10.0)]
+    return CostModel(regions, {("aws:a", "aws:b"): 0.01,
+                               ("aws:b", "aws:a"): 0.01})
+
+
+TEVEN_S = 0.001 * 30 * DAY          # 2592 s
+
+
+def mk_trace(rows, regions=("aws:a", "aws:b")):
+    ev = np.zeros(len(rows), dtype=EVENT_DTYPE)
+    for i, (t, op, obj, size, region) in enumerate(rows):
+        ev[i] = (t, op, obj, size, region, 0)
+    return Trace("ttl_edge", ev, tuple(regions), ("bucket-0",))
+
+
+# ---------------------------------------------------------------------------
+# Reset-on-access re-arming
+# ---------------------------------------------------------------------------
+
+def test_reset_on_access_rearms_expiry():
+    """GETs spaced at 0.5 * TTL keep the cache replica alive indefinitely;
+    a single gap > TTL finally misses again."""
+    cat = tiny_catalog()
+    ttl = TEVEN_S
+    rows = [(0.0, OP_PUT, 1, 2 ** 20, 0)]
+    t = 600.0
+    for _ in range(6):
+        rows.append((t, OP_GET, 1, 2 ** 20, 1))
+        t += 0.5 * ttl
+    rows.append((t + 2 * ttl, OP_GET, 1, 2 ** 20, 1))     # past the TTL
+    sim = Simulator(cat, make_policy("t_even", cat), mode="FB",
+                    scan_interval=3600.0)
+    rep = sim.run(mk_trace(rows))
+    # first GET misses and caches; the five re-armed GETs hit; the late one
+    # misses because the replica expired TTL seconds after the *last* access
+    assert rep.n_miss == 2
+    assert rep.n_hit == 5
+    assert rep.n_evictions >= 1
+
+
+def _reference_hits(gaps, ttl):
+    """Closed-form §3.2.1 semantics for a static-TTL policy at one cache
+    region: a GET hits iff it arrives strictly within TTL of the previous
+    access (at exactly TTL the lazy eviction scan collects the replica
+    before the GET dispatches)."""
+    return [gap < ttl for gap in gaps]
+
+
+def _check_reset_on_access(gaps):
+    cat = tiny_catalog()
+    rows = [(0.0, OP_PUT, 1, 2 ** 20, 0)]
+    t = 60.0
+    get_times = []
+    for gap in gaps:
+        get_times.append(t)
+        rows.append((t, OP_GET, 1, 2 ** 20, 1))
+        t += gap
+    sim = Simulator(cat, make_policy("t_even", cat), mode="FB",
+                    scan_interval=3600.0, track_decisions=True)
+    sim.run(mk_trace(rows))
+    got = [hit for (_t, _o, _r, _s, hit) in sim.decisions]
+    want = [False] + _reference_hits(gaps[:-1], TEVEN_S)
+    assert got == want, (gaps, got, want)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_reset_on_access_property(seed):
+    rng = np.random.default_rng(seed + 100)
+    gaps = (rng.random(int(rng.integers(2, 12))) * 2.0 * TEVEN_S + 1.0)
+    _check_reset_on_access([float(g) for g in gaps])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(1.0, 3 * TEVEN_S), min_size=1, max_size=15))
+    def test_reset_on_access_hypothesis(gaps):
+        _check_reset_on_access(gaps)
+
+
+# ---------------------------------------------------------------------------
+# FP sole-copy survival
+# ---------------------------------------------------------------------------
+
+def _check_fp_sole_copy(steps, policy_name):
+    """Random FP access sequences: every GET is serviced and every live
+    object retains >= 1 replica at all times."""
+    cat = tiny_catalog()
+    rows, t, n_gets = [], 0.0, 0
+    put_done = set()
+    for (obj, region, gap) in steps:
+        t += gap
+        if obj not in put_done:
+            put_done.add(obj)
+            rows.append((t, OP_PUT, obj, 4096, region))
+        else:
+            rows.append((t, OP_GET, obj, 4096, region))
+            n_gets += 1
+    sim = Simulator(cat, make_policy(policy_name, cat), mode="FP",
+                    scan_interval=1800.0)
+    rep = sim.run(mk_trace(rows))
+    assert rep.n_get == n_gets          # no GET ever found zero replicas
+    for oid in put_done:
+        assert sim.objects[oid].replicas, f"object {oid} lost its last copy"
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fp_sole_copy_never_evicted_property(seed):
+    rng = np.random.default_rng(seed * 31 + 7)
+    steps = [
+        (int(rng.integers(0, 3)), int(rng.integers(0, 2)),
+         60.0 + float(rng.random()) * 3 * TEVEN_S)
+        for _ in range(int(rng.integers(4, 25)))
+    ]
+    _check_fp_sole_copy(steps, ["t_even", "always_evict"][seed % 2])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 1),
+                              st.floats(60.0, 3 * TEVEN_S)),
+                    min_size=2, max_size=25),
+           st.sampled_from(["t_even", "always_evict", "skystore"]))
+    def test_fp_sole_copy_never_evicted_hypothesis(steps, policy):
+        _check_fp_sole_copy(steps, policy)
+
+
+def test_fp_sole_copy_rearms_in_live_metadata():
+    """The live eviction scan re-arms (not drops) the sole FP copy, so a
+    GET far beyond the TTL is still a local hit -- mirroring the sim."""
+    cat = tiny_catalog()
+    meta = MetadataServer(cat, mode="FP", versioning=False)
+    backends = {r: InMemoryBackend(r) for r in cat.region_names()}
+    store = VirtualStore(cat, backends, meta, mode="FP",
+                         policy=make_policy("t_even", cat))
+    store.create_bucket("bucket-0")
+    from repro.core.api import GetRequest, PutRequest
+    store.dispatch(PutRequest("bucket-0", "7", "aws:a", body=b"x" * 64, at=0.0))
+    # shrink the TTL to something that lapses, as a policy GET would
+    meta.touch_replica("bucket-0", "7", "aws:a", now=0.0, ttl=100.0)
+    assert store.run_eviction_scan(now=50 * TEVEN_S) == 0   # re-armed, kept
+    rm = meta.objects[("bucket-0", "7")].latest.replicas["aws:a"]
+    assert rm.expire > 50 * TEVEN_S
+    r = store.dispatch(GetRequest("bucket-0", "7", "aws:a", at=51 * TEVEN_S))
+    assert r.hit and r.source_region == "aws:a"
+
+
+# ---------------------------------------------------------------------------
+# Pinned-base invariants (FB)
+# ---------------------------------------------------------------------------
+
+def _check_pinned_base(steps):
+    """FB mode: the first writer fixes the base; later cross-region
+    overwrites refresh (never move, never evict) the pinned base copy."""
+    cat = tiny_catalog()
+    sim = Simulator(cat, make_policy("t_even", cat), mode="FB",
+                    scan_interval=1800.0)
+    rows, t = [], 0.0
+    first_writer = {}
+    for (obj, op_put, region, gap) in steps:
+        t += gap
+        op = OP_PUT if op_put or obj not in first_writer else OP_GET
+        if op == OP_PUT and obj not in first_writer:
+            first_writer[obj] = region
+        rows.append((t, op, obj, 4096, region))
+    rep = sim.run(mk_trace(rows))
+    for oid, writer in first_writer.items():
+        obj = sim.objects[oid]
+        base = ("aws:a", "aws:b")[writer]
+        assert obj.base_region == base          # first write wins, forever
+        assert base in obj.replicas             # base copy never evicted
+        assert obj.replicas[base].pinned
+    assert rep.storage_base > 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pinned_base_invariants_property(seed):
+    rng = np.random.default_rng(seed * 17 + 3)
+    steps = [
+        (int(rng.integers(0, 3)), bool(rng.integers(0, 2)),
+         int(rng.integers(0, 2)), 60.0 + float(rng.random()) * 2 * TEVEN_S)
+        for _ in range(int(rng.integers(4, 30)))
+    ]
+    _check_pinned_base(steps)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 2), st.booleans(),
+                              st.integers(0, 1), st.floats(60.0, 2 * TEVEN_S)),
+                    min_size=2, max_size=30))
+    def test_pinned_base_invariants_hypothesis(steps):
+        _check_pinned_base(steps)
+
+
+def test_pinned_base_survives_live_scan_and_overwrite():
+    cat = tiny_catalog()
+    meta = MetadataServer(cat, mode="FB", versioning=False)
+    backends = {r: InMemoryBackend(r) for r in cat.region_names()}
+    store = VirtualStore(cat, backends, meta, mode="FB",
+                         policy=make_policy("t_even", cat))
+    store.create_bucket("bucket-0")
+    from repro.core.api import PutRequest
+    store.dispatch(PutRequest("bucket-0", "3", "aws:a", body=b"v1", at=0.0))
+    # cross-region overwrite syncs to -- not moves -- the base
+    store.dispatch(PutRequest("bucket-0", "3", "aws:b", body=b"v2", at=10.0))
+    om = meta.objects[("bucket-0", "3")]
+    assert om.base_region == "aws:a"
+    assert om.latest.replicas["aws:a"].pinned
+    store.run_eviction_scan(now=1e9)
+    assert "aws:a" in om.latest.replicas        # pinned base never scanned out
+    assert backends["aws:a"].get("bucket-0", "3@v2") == b"v2"

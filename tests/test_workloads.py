@@ -1,0 +1,120 @@
+"""Synthetic workload generator invariants (repro.core.workloads)."""
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import pick_regions
+from repro.core.simulator import (
+    OP_DELETE, OP_GET, OP_HEAD, OP_LIST, OP_PUT, run_policy,
+)
+from repro.core.workloads import WORKLOAD_NAMES, make_workload
+
+REGIONS = pick_regions(3).region_names()
+
+
+@pytest.fixture(scope="module", params=WORKLOAD_NAMES)
+def trace(request):
+    return make_workload(request.param, REGIONS, seed=3)
+
+
+def test_timestamps_strictly_increase(trace):
+    t = trace.events["t"]
+    assert (np.diff(t) > 0).all()
+
+
+def test_first_event_per_object_is_put(trace):
+    seen = set()
+    for ev in trace.events:
+        op, obj = int(ev["op"]), int(ev["obj"])
+        if op == OP_LIST:
+            continue
+        if obj not in seen:
+            assert op == OP_PUT, (obj, op)
+            seen.add(obj)
+
+
+def test_no_access_after_delete(trace):
+    dead = set()
+    for ev in trace.events:
+        op, obj = int(ev["op"]), int(ev["obj"])
+        if op == OP_LIST:
+            continue
+        assert obj not in dead, f"object {obj} accessed after DELETE"
+        if op == OP_DELETE:
+            dead.add(obj)
+
+
+def test_regions_and_buckets_in_range(trace):
+    assert trace.events["region"].max() < len(trace.regions)
+    assert trace.events["bucket"].max() < len(trace.buckets)
+
+
+def test_deterministic_per_seed(trace):
+    again = make_workload(trace.name.split("/", 1)[1], REGIONS, seed=3)
+    assert np.array_equal(trace.events, again.events)
+
+
+def test_seed_changes_trace(trace):
+    other = make_workload(trace.name.split("/", 1)[1], REGIONS, seed=4)
+    assert not np.array_equal(trace.events, other.events)
+
+
+def test_simulator_runs_every_workload(trace):
+    rep = run_policy(trace, pick_regions(3), "skystore", mode="FB")
+    assert rep.n_get > 0 and rep.total > 0
+
+
+def test_zipfian_is_skewed():
+    tr = make_workload("zipfian", REGIONS, seed=1)
+    ev = tr.events
+    gets = ev[ev["op"] == OP_GET]
+    objs, counts = np.unique(gets["obj"], return_counts=True)
+    counts = np.sort(counts)[::-1]
+    top10 = counts[: max(1, len(counts) // 10)].sum()
+    assert top10 / counts.sum() > 0.4       # heavy head
+    assert (ev["op"] == OP_HEAD).sum() > 0  # HEAD traffic present
+    assert (ev["op"] == OP_LIST).sum() > 0  # LIST traffic present
+    assert (ev["op"] == OP_DELETE).sum() > 0
+
+
+def test_write_heavy_overwrites():
+    tr = make_workload("write_heavy", REGIONS, seed=1)
+    ev = tr.events
+    puts = ev[ev["op"] == OP_PUT]
+    put_frac = len(puts) / len(ev)
+    assert 0.3 < put_frac < 0.6
+    # at least one object is genuinely overwritten (multiple PUTs)
+    _objs, counts = np.unique(puts["obj"], return_counts=True)
+    assert counts.max() >= 3
+    # some overwrites land cross-region (exercises §4.4 sync-to-base)
+    multi = [o for o, c in zip(_objs, counts) if c > 1]
+    regions = {int(o): set(puts["region"][puts["obj"] == o]) for o in multi}
+    assert any(len(r) > 1 for r in regions.values())
+
+
+def test_scan_backup_has_daily_sweeps():
+    tr = make_workload("scan_backup", REGIONS, seed=1)
+    ev = tr.events
+    assert (ev["op"] == OP_LIST).sum() >= 2
+    n_objects = len(np.unique(ev["obj"][ev["op"] == OP_PUT]))
+    gets = ev[ev["op"] == OP_GET]
+    # every object is swept at least once per sweep day
+    day = 24 * 3600.0
+    d1 = gets[(gets["t"] > day) & (gets["t"] < 2 * day)]
+    assert len(np.unique(d1["obj"])) == n_objects
+
+
+def test_hotspot_shifts_read_region():
+    tr = make_workload("hotspot_shift", REGIONS, seed=2)
+    ev = tr.events
+    gets = ev[ev["op"] == OP_GET]
+    # the dominant read region is not constant across the trace
+    q = len(gets) // 4
+    dom = [np.bincount(gets["region"][i * q:(i + 1) * q]).argmax()
+           for i in range(4)]
+    assert len(set(dom)) > 1
+
+
+def test_unknown_workload_raises():
+    with pytest.raises(KeyError):
+        make_workload("nope", REGIONS)
