@@ -21,6 +21,48 @@ def _emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+def replay_throughput(n_events_baseline: int = 3000, tier: str = "large",
+                      **tier_overrides) -> dict:
+    """Replay-throughput benchmark on the large workload tier (>= 100k
+    events / >= 10k objects by default): events/sec of both planes on the
+    event spine, plus the pre-spine full-scan live driver on a truncated
+    prefix (it is O(objects) per event -- running it over the whole large
+    trace would take tens of minutes, which is the point)."""
+    import time as _time
+
+    from repro.core.costmodel import pick_regions
+    from repro.core.replay import live_replay_throughput, run_sim_plane
+    from repro.core.traces import Trace
+    from repro.core.workloads import make_workload
+
+    cat = pick_regions(3)
+    tr = make_workload("zipfian", cat.region_names(), seed=7, tier=tier,
+                       **tier_overrides)
+    out = {"events": len(tr.events), "objects": tr.stats()["objects"]}
+
+    t0 = _time.perf_counter()
+    run_sim_plane(tr, cat, "skystore")
+    dt = _time.perf_counter() - t0
+    out["sim_events_per_sec"] = len(tr.events) / dt
+
+    live = live_replay_throughput(tr, cat, "skystore")
+    out["live_events_per_sec"] = live["events_per_sec"]
+    out["n_full_scans"] = live["n_full_scans"]
+    out["expiry_pops"] = live["expiry_pops"]
+
+    if n_events_baseline:
+        prefix = Trace(tr.name + "/prefix",
+                       tr.events[:n_events_baseline].copy(),
+                       tr.regions, tr.buckets)
+        base = live_replay_throughput(prefix, cat, "skystore",
+                                      full_scan=True)
+        out["fullscan_events_per_sec"] = base["events_per_sec"]
+        out["fullscan_prefix_events"] = base["events"]
+        out["live_speedup_vs_fullscan"] = (
+            out["live_events_per_sec"] / base["events_per_sec"])
+    return out
+
+
 def smoke() -> int:
     """CI canary: every benchmark entry point plus one differential replay,
     at tiny sizes.  Exits non-zero if cost numbers stop making sense, so the
@@ -64,6 +106,28 @@ def smoke() -> int:
     sb = kernel_bench.simulator_bench()
     _emit("smoke_simulator", sb["us_per_event"],
           f"events_per_s={sb['events_per_s']:.0f}")
+
+    # Large-tier replay smoke (reduced size: same shape, CI-friendly): the
+    # live plane must drain the event spine, never the O(objects) full scan.
+    t0 = time.perf_counter()
+    rt = replay_throughput(n_events_baseline=0, tier="large",
+                           n_objects=2000, n_requests=15_000)
+    _emit("smoke_replay_throughput", (time.perf_counter() - t0) * 1e6,
+          f"replay_events_per_sec={rt['live_events_per_sec']:.0f};"
+          f"sim_events_per_sec={rt['sim_events_per_sec']:.0f};"
+          f"n_full_scans={rt['n_full_scans']}")
+    if rt["n_full_scans"] != 0:
+        failures.append(
+            f"live plane fell back to full-table scanning "
+            f"({rt['n_full_scans']} full scans on the spine path)")
+    if rt["expiry_pops"] <= 0:
+        failures.append("live replay popped no expirations off the shared "
+                        "index (spine not draining the ExpiryIndex?)")
+    if rt["live_events_per_sec"] < 500:
+        failures.append(
+            f"live replay throughput collapsed: "
+            f"{rt['live_events_per_sec']:.0f} events/sec (O(objects) "
+            f"per-event work crept back into the hot path?)")
 
     if failures:
         for f in failures:
@@ -139,6 +203,18 @@ def main() -> None:
     _emit("simulator_throughput", sb["us_per_event"],
           f"events_per_s={sb['events_per_s']:.0f}")
 
+    t0 = time.perf_counter()
+    rt = replay_throughput(
+        n_events_baseline=2000 if args.quick else 3000,
+        tier="large",
+        **(dict(n_objects=2000, n_requests=15_000) if args.quick else {}))
+    results["replay_throughput"] = rt
+    _emit("replay_throughput_large_tier", (time.perf_counter() - t0) * 1e6,
+          f"replay_events_per_sec={rt['live_events_per_sec']:.0f};"
+          f"sim={rt['sim_events_per_sec']:.0f};"
+          f"fullscan_baseline={rt['fullscan_events_per_sec']:.0f};"
+          f"speedup={rt['live_speedup_vs_fullscan']:.1f}x")
+
     # ---------------- human-readable detail ----------------
     def table(title, d):
         print(f"\n== {title} ==")
@@ -160,6 +236,11 @@ def main() -> None:
     table("table5: scaling 3/6/9 regions", results["table5"])
     table("table6: end-to-end latency/cost", results["table6"])
     table("fig7: op overheads (us)", results["fig7"])
+    print("\n== replay throughput: live plane on the event spine "
+          "(large tier) ==")
+    for k, v in results["replay_throughput"].items():
+        print(f"{k:28s} {v:12.1f}" if isinstance(v, float) else
+              f"{k:28s} {v!r:>12}")
 
     if args.json_out:
         with open(args.json_out, "w") as f:

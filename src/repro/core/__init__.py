@@ -9,6 +9,10 @@ Public surface:
   ttl_policy     -- ExpectedCost(TTL), argmin scan, adaptive controller
   policies       -- SkyStore + every §6.2.2 baseline
   simulator      -- event-driven monetary-cost simulator
+  expiry         -- the shared lazy-expiration index (ExpiryIndex): one
+                    min-expiry heap both planes pop in identical order
+  engine         -- the virtual-time event spine (EventSpine) merging
+                    trace events with timer/expiry/epoch events
   ledger         -- CostReport + the live-plane CostLedger (per-request
                     charging of the same CostModel the simulator uses)
   replay         -- differential trace replay: Simulator vs live
@@ -55,6 +59,8 @@ from .costmodel import (  # noqa: F401
     pick_regions,
     tpu_tier_catalog,
 )
+from .engine import EventSpine, SpineEvent  # noqa: F401
+from .expiry import ExpiryIndex, KeyInterner  # noqa: F401
 from .histogram import AccessHistogram, RollingHistogram, cell_edges  # noqa: F401
 from .ledger import CostLedger, CostReport  # noqa: F401
 from .policies import Policy, make_policy  # noqa: F401

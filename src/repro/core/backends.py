@@ -16,7 +16,7 @@ import dataclasses
 import hashlib
 import os
 import time
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -34,6 +34,18 @@ class Backend:
 
     def put(self, bucket: str, key: str, data: bytes) -> HeadResult:
         raise NotImplementedError
+
+    def put_stream(self, bucket: str, key: str,
+                   chunks: Iterable[bytes]) -> HeadResult:
+        """Write an object from an iterator of chunks.  The base
+        implementation spools into one buffer (a backend that *is* RAM has
+        to hold the bytes anyway); backends with real media override it to
+        keep the writer's working set at one chunk (see
+        :class:`FSBackend`)."""
+        buf = bytearray()
+        for c in chunks:
+            buf += c
+        return self.put(bucket, key, bytes(buf))
 
     def get(self, bucket: str, key: str,
             byte_range: Optional[Tuple[int, int]] = None) -> bytes:
@@ -143,6 +155,23 @@ class FSBackend(Backend):
             f.write(data)
         os.replace(tmp, p)            # atomic within the region
         return HeadResult(key, len(data), _etag(data), time.time())
+
+    def put_stream(self, bucket, key, chunks):
+        """True streaming write: chunks go straight to the temp file, so
+        proxy RAM holds one chunk at a time (the multipart-completion
+        working-set bound); the ETag is digested incrementally."""
+        p = self._path(bucket, key)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        tmp = p + ".tmp"
+        md5 = hashlib.md5()
+        size = 0
+        with open(tmp, "wb") as f:
+            for c in chunks:
+                f.write(c)
+                md5.update(c)
+                size += len(c)
+        os.replace(tmp, p)            # atomic within the region
+        return HeadResult(key, size, md5.hexdigest(), time.time())
 
     def get(self, bucket, key, byte_range=None):
         p = self._path(bucket, key)

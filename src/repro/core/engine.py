@@ -1,0 +1,105 @@
+"""The virtual-time event spine: one ordered stream for both planes.
+
+Trace replay needs four kinds of events interleaved on a single virtual
+timeline:
+
+* **data events** -- the trace's typed request objects (clocked by ``.at``);
+* **expiry pops** -- replicas coming due off the shared
+  :class:`~repro.core.expiry.ExpiryIndex` (the §3.2 lazy expiration heap);
+* **scan ticks** -- the §4.2 periodic maintenance hook
+  (``Policy.periodic``, pending-upload rollback), every ``scan_interval``;
+* **epoch boundaries** -- SPANStore's solver re-runs (fired at the first
+  data event of each new epoch, as the solver sees the epoch's workload).
+
+Before this module each plane hand-rolled the interleaving (the simulator
+around its private heap, the replay driver around a full eviction scan
+before *every* event -- O(objects) per event).  :class:`EventSpine` owns the
+merge, so both planes process timers and expirations in the identical order
+by construction, and the live plane's per-event work drops to O(expired).
+
+Ordering contract at a shared timestamp ``t`` (matching the historical
+driver loops exactly):
+
+  1. expiries due at or before a scan tick pop first, then the tick fires;
+  2. all ticks ``<= t`` fire before anything else at ``t``;
+  3. an epoch boundary fires next (before the pre-event drain -- the solver
+     prunes replica sets *before* lazily expired replicas are collected);
+  4. expiries due ``<= t`` pop;
+  5. the data event dispatches.
+
+After the last data event, remaining due expiries pop at the horizon and a
+final ``END`` event closes the stream (storage flush / ledger finalize).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable, Iterable, Iterator, Optional
+
+from .expiry import ExpiryIndex
+
+__all__ = ["EventSpine", "SpineEvent", "EXPIRE", "TICK", "EPOCH", "DATA", "END"]
+
+EXPIRE = "expire"   # one replica came due: ident identifies it, t = expiry
+TICK = "tick"       # periodic maintenance boundary (Policy.periodic)
+EPOCH = "epoch"     # SPANStore epoch boundary: re-solve replica sets
+DATA = "data"       # a trace request: dispatch it
+END = "end"         # stream closed at the horizon: flush open lifetimes
+
+
+@dataclasses.dataclass
+class SpineEvent:
+    kind: str
+    t: float
+    request: object = None          # DATA: the typed api request
+    ident: Optional[Hashable] = None  # EXPIRE: the ExpiryIndex ident
+    epoch: int = -1                 # EPOCH: the new epoch index
+
+
+class EventSpine:
+    """Merge ``requests`` (typed api objects with ``.at`` set) with timer
+    and expiry events into one ordered virtual-time stream.
+
+    The spine *drives* the attached :class:`ExpiryIndex`: every yielded
+    ``EXPIRE`` event is already consumed from the index, and the consumer's
+    reaction (drop vs. re-arm) is observed before the next pop -- so an FP
+    sole-copy re-arm that lands back inside the drain window pops again,
+    exactly like the historical "re-arm until clear" loops.
+    """
+
+    def __init__(
+        self,
+        requests: Iterable,
+        expiry: ExpiryIndex,
+        scan_interval: float,
+        epoch_len: Optional[float] = None,
+        horizon: float = 0.0,
+    ) -> None:
+        self.requests = requests
+        self.expiry = expiry
+        self.scan_interval = scan_interval
+        self.epoch_len = epoch_len
+        self.horizon = horizon
+
+    def _drain(self, now: float) -> Iterator[SpineEvent]:
+        for texp, ident in self.expiry.pop_due(now):
+            yield SpineEvent(EXPIRE, texp, ident=ident)
+
+    def __iter__(self) -> Iterator[SpineEvent]:
+        next_tick = self.scan_interval
+        epoch_idx = -1
+        for req in self.requests:
+            t = float(req.at)
+            while next_tick <= t:
+                yield from self._drain(next_tick)
+                yield SpineEvent(TICK, next_tick)
+                next_tick += self.scan_interval
+            if self.epoch_len is not None:
+                e = int(t // self.epoch_len)
+                if e != epoch_idx:
+                    epoch_idx = e
+                    yield SpineEvent(EPOCH, t, epoch=e)
+            yield from self._drain(t)
+            yield SpineEvent(DATA, t, request=req)
+        yield from self._drain(self.horizon)
+        yield SpineEvent(END, self.horizon)

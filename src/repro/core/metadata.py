@@ -27,31 +27,109 @@ import numpy as np
 
 from .api import ApiError, choose_get_source, resolve_put_placement
 from .costmodel import CostModel
+from .expiry import ExpiryIndex, KeyInterner
 from .ledger import CostLedger
 from .ttl_policy import AdaptiveTTLController
 
 PENDING, COMMITTED = "pending", "committed"
 
 
-@dataclasses.dataclass
 class ReplicaMeta:
-    region: str
-    status: str
-    created_at: float
-    last_access: float
-    ttl: float = float("inf")
-    pinned: bool = False
-    etag: str = ""
-    size: int = 0
+    """One physical replica's control-plane record.
+
+    ``ttl``, ``last_access`` and ``pinned`` are property-backed: the derived
+    ``expire`` is what the shared :class:`~repro.core.expiry.ExpiryIndex`
+    orders on, so *any* mutation -- including tests force-expiring a replica
+    by assigning ``rep.ttl = 1.0`` directly -- transparently reschedules the
+    replica in the index (the superseded heap entry is invalidated via its
+    generation token)."""
+
+    __slots__ = ("region", "status", "created_at", "_last_access", "_ttl",
+                 "_pinned", "etag", "size", "_index", "_ident", "_order")
+
+    def __init__(self, region: str, status: str, created_at: float,
+                 last_access: float, ttl: float = float("inf"),
+                 pinned: bool = False, etag: str = "", size: int = 0) -> None:
+        self.region = region
+        self.status = status
+        self.created_at = created_at
+        self._last_access = last_access
+        self._ttl = ttl
+        self._pinned = pinned
+        self.etag = etag
+        self.size = size
+        self._index: Optional[ExpiryIndex] = None
+        self._ident = None
+        self._order = None
+
+    # -- expiry-index binding ------------------------------------------------
+    def bind_index(self, index: ExpiryIndex, ident, order) -> None:
+        """Attach this replica to the metadata server's shared expiry index;
+        from here on every expiry-moving mutation re-arms its schedule."""
+        self._index, self._ident, self._order = index, ident, order
+        self._reindex()
+
+    def unbind_index(self) -> None:
+        """Detach (replica dropped): cancel the schedule."""
+        if self._index is not None:
+            self._index.disarm(self._ident)
+        self._index = None
+
+    def _reindex(self) -> None:
+        if self._index is not None:
+            self._index.arm(self._ident, self._order,
+                            float("inf") if self._pinned else self.expire)
+
+    # -- expiry-moving fields (mutations re-index) ---------------------------
+    @property
+    def last_access(self) -> float:
+        return self._last_access
+
+    @last_access.setter
+    def last_access(self, value: float) -> None:
+        self._last_access = value
+        self._reindex()
+
+    @property
+    def ttl(self) -> float:
+        return self._ttl
+
+    @ttl.setter
+    def ttl(self, value: float) -> None:
+        self._ttl = value
+        self._reindex()
+
+    @property
+    def pinned(self) -> bool:
+        return self._pinned
+
+    @pinned.setter
+    def pinned(self, value: bool) -> None:
+        self._pinned = value
+        self._reindex()
 
     @property
     def expire(self) -> float:
-        return self.last_access + self.ttl
+        return self._last_access + self._ttl
+
+    def __repr__(self) -> str:
+        return (f"ReplicaMeta(region={self.region!r}, status={self.status!r}, "
+                f"created_at={self.created_at!r}, "
+                f"last_access={self._last_access!r}, ttl={self._ttl!r}, "
+                f"pinned={self._pinned!r}, etag={self.etag!r}, "
+                f"size={self.size!r})")
 
     def to_json(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["ttl"] = None if np.isinf(self.ttl) else self.ttl
-        return d
+        return {
+            "region": self.region,
+            "status": self.status,
+            "created_at": self.created_at,
+            "last_access": self._last_access,
+            "ttl": None if np.isinf(self._ttl) else self._ttl,
+            "pinned": self._pinned,
+            "etag": self.etag,
+            "size": self.size,
+        }
 
     @classmethod
     def from_json(cls, d: dict) -> "ReplicaMeta":
@@ -106,6 +184,17 @@ class MetadataServer:
         #: Optional live-plane cost accounting (see repro.core.ledger): replica
         #: lifetime open/close events are reported from the mutation sites.
         self.ledger = ledger
+        #: The shared §3.2 lazy expiration heap (same class as the
+        #: Simulator's): every committed replica with a finite TTL is armed
+        #: here, so the eviction scan is O(expired) pops, not O(objects).
+        self.expiry = ExpiryIndex()
+        #: Dense object ids for arbitrary keys -- the cross-plane expiry
+        #: sort key and the id policies key their state by (numeric trace
+        #: keys keep their integer value, matching the Simulator).
+        self.interner = KeyInterner()
+        #: Calls to the legacy O(objects) sweep (`full_scan_expired`) --
+        #: stays 0 on the fast path; CI asserts it (benchmarks/run.py smoke).
+        self.n_full_scans = 0
         self.objects: Dict[Tuple[str, str], ObjectMeta] = {}
         self.buckets: Dict[str, dict] = {}
         #: per-bucket sorted key index -- keeps paginated listings O(page)
@@ -130,6 +219,15 @@ class MetadataServer:
             raise ApiError("BucketNotEmpty", f"bucket {bucket!r} not empty")
         del self.buckets[bucket]
         self._key_index.pop(bucket, None)
+
+    def _bind_replica(self, bucket: str, key: str, version: int,
+                      rm: ReplicaMeta) -> None:
+        """Register one replica with the shared expiry index.  The identity
+        is (bucket, key, version, region); the *sort* key is (oid, region)
+        -- the exact ordering the simulator's heap uses -- so both planes
+        pop coincident expirations identically."""
+        rm.bind_index(self.expiry, (bucket, key, version, rm.region),
+                      (self.interner.intern(key), rm.region))
 
     def _index_add(self, bucket: str, key: str) -> None:
         keys = self._key_index.setdefault(bucket, [])
@@ -187,15 +285,22 @@ class MetadataServer:
             if not self.versioning and len(om.versions) > 1:
                 # Last-writer-wins: stale versions' replicas end here (§4.4).
                 for old_vm in om.versions[:-1]:
-                    for r in old_vm.replicas:
+                    for r, old_rm in old_vm.replicas.items():
+                        old_rm.unbind_index()
                         if self.ledger is not None:
                             self.ledger.on_replica_drop(
                                 bucket, key, r, now, version=old_vm.version)
                 om.versions = om.versions[-1:]
         pinned = placement.pinned
-        vm.replicas[region] = ReplicaMeta(
+        replaced = vm.replicas.get(region)
+        if replaced is not None:
+            replaced.unbind_index()
+        rm = ReplicaMeta(
             region, COMMITTED, now, now, float("inf"), pinned, etag, size
         )
+        vm.replicas[region] = rm
+        self._bind_replica(bucket, key, version, rm)
+        self._rearm_unscheduled(bucket, key, vm)
         if self.ledger is not None:
             self.ledger.on_replica_commit(bucket, key, region, size, pinned,
                                           now, version=version)
@@ -286,8 +391,13 @@ class MetadataServer:
         if ttl is None:
             ttl = self._object_ttl(bucket, region, self._holders_of(vm), now)
         pinned = resolve_put_placement(self.mode, om.base_region, region).pinned
+        replaced = vm.replicas.get(region)
+        if replaced is not None:
+            replaced.unbind_index()
         rm = ReplicaMeta(region, COMMITTED, now, now, ttl, pinned, etag, size)
         vm.replicas[region] = rm
+        self._bind_replica(bucket, key, vm.version, rm)
+        self._rearm_unscheduled(bucket, key, vm)
         if self.ledger is not None:
             self.ledger.on_replica_commit(bucket, key, region, size, pinned,
                                           now, version=vm.version)
@@ -317,8 +427,10 @@ class MetadataServer:
         now = time.time() if now is None else now
         om = self.objects.get((bucket, key))
         vm = om.latest if om is not None else None
-        if vm is None or vm.replicas.pop(region, None) is None:
+        rm = vm.replicas.pop(region, None) if vm is not None else None
+        if rm is None:
             return None
+        rm.unbind_index()
         if self.ledger is not None:
             self.ledger.on_replica_drop(bucket, key, region, now,
                                         count_eviction=count_eviction,
@@ -343,12 +455,79 @@ class MetadataServer:
         caller (proxy / lifecycle worker) performs the physical deletes; we
         only mutate metadata -- "no data transfer occurs" (§4.2).
 
-        Expired replicas of one object are processed in (expiry, region)
-        order -- the order the simulator's lazy expiration heap pops them --
-        so the survivor under the sole-copy guard is the same in both planes.
-        In FP mode the sole surviving copy is never evicted: its expiry is
-        re-armed instead (§3.2.1), again mirroring the simulator.
+        O(expired): due replicas pop off the shared
+        :class:`~repro.core.expiry.ExpiryIndex` in the *same*
+        (expire, oid, region) order the simulator's heap uses -- so the
+        survivor under the sole-copy guard is identical in both planes by
+        construction, not by careful mirroring.  In FP mode the sole
+        surviving copy is never evicted: its expiry is re-armed instead
+        (§3.2.1); a re-arm still below ``now`` pops again within this scan.
         """
+        now = time.time() if now is None else now
+        out = []
+        for texp, ident in self.expiry.pop_due(now):
+            victim = self.expire_replica(ident, texp)
+            if victim is not None:
+                out.append(victim)
+        return out
+
+    def expire_replica(self, ident, texp: float) -> Optional[Tuple[str, str, str, int]]:
+        """Process ONE expiry already popped off ``self.expiry`` (by
+        :meth:`scan_expired` or by the event spine's EXPIRE handler).
+        Returns the (bucket, key, region, version) to physically DELETE, or
+        None if the pop was stale / guarded (pinned, sole FP copy)."""
+        bucket, key, version, region = ident
+        om = self.objects.get((bucket, key))
+        vm = None
+        if om is not None:
+            vm = next((v for v in om.versions if v.version == version), None)
+        m = vm.replicas.get(region) if vm is not None else None
+        if m is None or m.status != COMMITTED or m.pinned:
+            return None
+        if m.expire > texp:
+            # Out-of-band mutation moved the expiry without the property
+            # setters seeing it; restore the schedule rather than dropping.
+            self._bind_replica(bucket, key, version, m)
+            return None
+        alive = sum(1 for x in vm.replicas.values() if x.status == COMMITTED)
+        if alive > self.min_fp_copies:
+            del vm.replicas[region]
+            m.unbind_index()
+            if self.ledger is not None:
+                self.ledger.on_replica_drop(bucket, key, region, m.expire,
+                                            count_eviction=True,
+                                            version=vm.version)
+            return (bucket, key, region, vm.version)
+        if self.mode == "FP":
+            # Sole copy: step the expiry by max(ttl, 1h) (keep paying
+            # storage, §3.2.1).  The property setter re-arms; if still due,
+            # the surrounding drain pops it again -- the lazy-heap form of
+            # the old "re-arm until the expiry clears now" loop.
+            m.last_access += max(m.ttl, 3600.0)
+        # Non-FP guarded pop (e.g. an unpinned FB sole copy after the base
+        # was lost to read-repair): the replica stays, unscheduled, until a
+        # sibling commit lifts the guard -- see _rearm_unscheduled.
+        return None
+
+    def _rearm_unscheduled(self, bucket: str, key: str, vm: VersionMeta) -> None:
+        """A new commit can lift the sole-copy guard off an expired sibling
+        whose pop was already consumed (the guarded branch of
+        :meth:`expire_replica`).  Put any such replica back on the schedule
+        so the next drain collects it -- the legacy full sweep re-examined
+        every replica each pass and would have dropped it then."""
+        for rm in vm.replicas.values():
+            if (rm.status == COMMITTED and not rm.pinned
+                    and np.isfinite(rm.expire)
+                    and self.expiry.armed_expire(
+                        (bucket, key, vm.version, rm.region)) is None):
+                self._bind_replica(bucket, key, vm.version, rm)
+
+    def full_scan_expired(self, now: Optional[float] = None) -> List[Tuple[str, str, str, int]]:
+        """The pre-spine O(objects-x-replicas) eviction sweep, kept verbatim
+        as the measurable baseline for the replay-throughput benchmark
+        (``python -m benchmarks.run``).  Counted in ``n_full_scans`` so CI
+        can assert the O(expired) path never silently falls back to it."""
+        self.n_full_scans += 1
         now = time.time() if now is None else now
         out = []
         for (bucket, key), om in self.objects.items():
@@ -364,6 +543,7 @@ class MetadataServer:
                                 if x.status == COMMITTED)
                     if alive > self.min_fp_copies:
                         del vm.replicas[m.region]
+                        m.unbind_index()
                         if self.ledger is not None:
                             self.ledger.on_replica_drop(
                                 bucket, key, m.region, m.expire,
@@ -383,9 +563,10 @@ class MetadataServer:
         if om is None:
             return []
         self._index_remove(bucket, key)
-        if self.ledger is not None:
-            for vm in om.versions:
-                for m in vm.replicas.values():
+        for vm in om.versions:
+            for m in vm.replicas.values():
+                m.unbind_index()
+                if self.ledger is not None:
                     self.ledger.on_replica_drop(bucket, key, m.region, now,
                                                 version=vm.version)
         return [
@@ -455,8 +636,11 @@ class MetadataServer:
             ms.objects[(om.bucket, om.key)] = om
         for bucket in ms.buckets:
             ms._key_index.setdefault(bucket, [])
-        for (bucket, key) in ms.objects:
+        for (bucket, key), om in ms.objects.items():
             ms._index_add(bucket, key)
+            for vm in om.versions:
+                for rm in vm.replicas.values():
+                    ms._bind_replica(bucket, key, vm.version, rm)
         return ms
 
     def reconcile(self, backends: Dict[str, "object"]) -> int:
@@ -479,9 +663,11 @@ class MetadataServer:
                         )
                     vm = om.latest
                     if region not in vm.replicas:
-                        vm.replicas[region] = ReplicaMeta(
+                        rm = ReplicaMeta(
                             region, COMMITTED, h.last_modified, h.last_modified,
                             float("inf"), region == om.base_region, h.etag, h.size,
                         )
+                        vm.replicas[region] = rm
+                        self._bind_replica(bucket, h.key, vm.version, rm)
                         found += 1
         return found

@@ -31,11 +31,13 @@ import argparse
 import dataclasses
 import json
 import os
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .api import ApiError, GetRequest, PutRequest
 from .backends import InMemoryBackend
 from .costmodel import CostModel, pick_regions
+from .engine import DATA, EPOCH, EXPIRE, TICK, EventSpine
 from .ledger import CostLedger, CostReport
 from .metadata import COMMITTED, MetadataServer
 from .policies import SPANStore, make_policy
@@ -53,7 +55,7 @@ GOLDEN_RTOL = 1e-9
 
 #: The policy x workload matrix pinned by the golden regression suite.
 GOLDEN_POLICIES = ("always_evict", "always_store", "t_even", "ewma",
-                   "ttl_cc", "skystore", "spanstore", "aws_mrb")
+                   "ttl_cc", "ttl_cc_obj", "skystore", "spanstore", "aws_mrb")
 GOLDEN_WORKLOADS = ("zipfian", "hotspot_shift", "write_heavy")
 GOLDEN_SEED = 7
 
@@ -149,13 +151,12 @@ def run_sim_plane(
     return report, sim.decisions, sim.replica_holders()
 
 
-def run_live_plane(
-    trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
-    scan_interval: float = DAY, backends: Optional[Dict] = None, **policy_kw,
-) -> Tuple[CostReport, List[Tuple], Dict]:
-    """Drive the live VirtualStore through the trace under virtual time,
-    mirroring ``Simulator.run``'s maintenance schedule step for step.
-    Pass ``backends`` to inspect physical traffic counters afterwards."""
+def _make_live_plane(
+    trace: Trace, cost: CostModel, policy_name: str, mode: str,
+    backends: Optional[Dict], **policy_kw,
+):
+    """Build the policy-driven live stack for one replay: store + ledger +
+    policy (reset, oracle attached) + SPANStore epoch summaries."""
     policy = make_policy(policy_name, cost, **policy_kw)
     mode = getattr(policy, "mode", None) or mode
     horizon = trace.duration
@@ -167,21 +168,73 @@ def run_live_plane(
                          ledger=ledger)
     for bucket in trace.buckets:
         store.create_bucket(bucket)
-
     policy.reset()
     if policy.requires_oracle:
         policy.oracle = build_oracle(trace)
     span_epochs = None
     if isinstance(policy, SPANStore):
         span_epochs = build_epoch_summaries(trace, policy.epoch)
+    return store, ledger, policy, span_epochs, horizon
 
+
+def _dispatch_live(store: VirtualStore, req, t: float,
+                   decisions: List[Tuple]) -> None:
+    """One data event on the live plane: materialize simulated PUT bodies,
+    dispatch, and record the per-GET routing decision.  The simulator
+    silently skips requests at missing keys; a live error on the same event
+    is a divergence to report, not a crash (hand-authored traces can
+    violate the generator invariants)."""
+    if isinstance(req, PutRequest) and req.body is None:
+        req = dataclasses.replace(req, body=b"\x00" * req.nbytes, size=None)
+    try:
+        resp = store.dispatch(req)
+    except ApiError as e:
+        decisions.append((t, type(req).__name__, getattr(req, "region", None),
+                          f"error:{e.code}", False))
+        return
+    if isinstance(req, GetRequest):
+        decisions.append((t, store._obj_id(req.key), req.region,
+                          resp.source_region, resp.hit))
+
+
+def _drive_live_spine(store: VirtualStore, policy, span_epochs, trace: Trace,
+                      scan_interval: float, horizon: float) -> List[Tuple]:
+    """Drain one :class:`~repro.core.engine.EventSpine` through the live
+    plane: expirations pop off the shared index (O(expired) per event)
+    instead of a full eviction scan before every request."""
+    decisions: List[Tuple] = []
+    epoch_len = policy.epoch if span_epochs is not None else None
+    spine = EventSpine(trace.iter_requests(), store.meta.expiry,
+                       scan_interval=scan_interval, epoch_len=epoch_len,
+                       horizon=horizon)
+    for sev in spine:
+        if sev.kind == EXPIRE:
+            store.expire_replica(sev.ident, sev.t)
+        elif sev.kind == DATA:
+            _dispatch_live(store, sev.request, sev.t, decisions)
+        elif sev.kind == TICK:
+            store.meta.expire_pending(sev.t)
+            policy.periodic(sev.t, store)
+        elif sev.kind == EPOCH:
+            gets, puts = span_epochs.get(sev.epoch, ({}, {}))
+            policy.solve_epoch(gets, puts)
+            _apply_spanstore_live(store, policy, sev.t)
+    return decisions
+
+
+def _drive_live_full_scan(store: VirtualStore, policy, span_epochs,
+                          trace: Trace, scan_interval: float,
+                          horizon: float) -> List[Tuple]:
+    """The pre-spine driver, kept as the measurable baseline: a full
+    eviction scan (O(objects)) before every replayed event."""
     decisions: List[Tuple] = []
     next_tick = scan_interval
     epoch_idx = -1
     for req in trace.iter_requests():
         t = float(req.at)
         while next_tick <= t:
-            store.policy_tick(next_tick)
+            store.run_eviction_scan(next_tick, full_scan=True)
+            policy.periodic(next_tick, store)
             next_tick += scan_interval
         if span_epochs is not None:
             e = int(t // policy.epoch)
@@ -190,24 +243,61 @@ def run_live_plane(
                 gets, puts = span_epochs.get(e, ({}, {}))
                 policy.solve_epoch(gets, puts)
                 _apply_spanstore_live(store, policy, t)
-        store.run_eviction_scan(t)
-        if isinstance(req, PutRequest) and req.body is None:
-            req = dataclasses.replace(req, body=b"\x00" * req.nbytes, size=None)
-        try:
-            resp = store.dispatch(req)
-        except ApiError as e:
-            # The simulator silently skips requests at missing keys; a live
-            # error on the same event is a divergence to report, not a crash
-            # (hand-authored traces can violate the generator invariants).
-            decisions.append((t, type(req).__name__, getattr(req, "region", None),
-                              f"error:{e.code}", False))
-            continue
-        if isinstance(req, GetRequest):
-            decisions.append((t, store._obj_id(req.key), req.region,
-                              resp.source_region, resp.hit))
-    store.run_eviction_scan(horizon)
-    report = ledger.finalize(horizon, meta)
-    return report, decisions, _live_holders(meta)
+        store.run_eviction_scan(t, full_scan=True)
+        _dispatch_live(store, req, t, decisions)
+    store.run_eviction_scan(horizon, full_scan=True)
+    return decisions
+
+
+def run_live_plane(
+    trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
+    scan_interval: float = DAY, backends: Optional[Dict] = None,
+    full_scan: bool = False, **policy_kw,
+) -> Tuple[CostReport, List[Tuple], Dict]:
+    """Drive the live VirtualStore through the trace under virtual time.
+
+    The trace drains through the same :class:`~repro.core.engine.EventSpine`
+    the simulator uses, so both planes pop expirations in the identical
+    (expire, oid, region) order by construction.  Pass ``backends`` to
+    inspect physical traffic counters afterwards; ``full_scan=True``
+    selects the legacy per-event O(objects) scan driver (benchmark
+    baseline -- semantically identical, measurably slower)."""
+    store, ledger, policy, span_epochs, horizon = _make_live_plane(
+        trace, cost, policy_name, mode, backends, **policy_kw)
+    drive = _drive_live_full_scan if full_scan else _drive_live_spine
+    decisions = drive(store, policy, span_epochs, trace, scan_interval,
+                      horizon)
+    report = ledger.finalize(horizon, store.meta)
+    return report, decisions, _live_holders(store.meta)
+
+
+def live_replay_throughput(
+    trace: Trace, cost: CostModel, policy_name: str = "skystore",
+    mode: str = "FB", scan_interval: float = DAY, full_scan: bool = False,
+    **policy_kw,
+) -> Dict[str, float]:
+    """Time one live-plane replay; returns events/sec plus the expiry-index
+    counters CI guards on (``n_full_scans`` must stay 0 on the spine
+    path -- any regression to full-table scanning shows up here)."""
+    store, ledger, policy, span_epochs, horizon = _make_live_plane(
+        trace, cost, policy_name, mode, None, **policy_kw)
+    drive = _drive_live_full_scan if full_scan else _drive_live_spine
+    t0 = time.perf_counter()
+    drive(store, policy, span_epochs, trace, scan_interval, horizon)
+    dt = time.perf_counter() - t0
+    report = ledger.finalize(horizon, store.meta)
+    n = len(trace.events)
+    return {
+        "workload": trace.name,
+        "policy": policy.name,
+        "events": n,
+        "seconds": dt,
+        "events_per_sec": n / dt if dt > 0 else float("inf"),
+        "n_full_scans": store.meta.n_full_scans,
+        "expiry_pops": store.meta.expiry.n_pops,
+        "expiry_stale": store.meta.expiry.n_stale,
+        "total_cost": report.total,
+    }
 
 
 def _apply_spanstore_live(store: VirtualStore, policy: SPANStore,
@@ -236,7 +326,7 @@ def _live_holders(meta: MetadataServer) -> Dict:
         regs = tuple(sorted(
             r for r, m in vm.replicas.items() if m.status == COMMITTED))
         if regs:
-            out[VirtualStore._obj_id(key)] = regs
+            out[meta.interner.intern(key)] = regs
     return out
 
 

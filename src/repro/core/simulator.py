@@ -29,7 +29,6 @@ Traces are numpy structured arrays (see :mod:`repro.core.traces`).
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -46,6 +45,8 @@ from .api import (
     resolve_put_placement,
 )
 from .costmodel import CostModel
+from .engine import DATA, EPOCH, EXPIRE, TICK, EventSpine
+from .expiry import ExpiryIndex
 from .ledger import CostReport  # noqa: F401  (re-export; CostReport moved)
 from .policies import GetContext, Oracle, Policy, SPANStore
 
@@ -61,7 +62,6 @@ class Replica:
     ttl: float
     expire: float
     pinned: bool = False
-    gen: int = 0          # heap-entry validity token
 
 
 @dataclasses.dataclass
@@ -100,7 +100,9 @@ class Simulator:
         self.min_fp_copies = min_fp_copies
 
         self.objects: Dict[int, ObjectState] = {}
-        self._heap: List[Tuple[float, int, str, int]] = []
+        #: The shared §3.2 lazy expiration heap (same class -- and thus the
+        #: same (expire, oid, region) pop order -- as the live MetadataServer).
+        self.expiry = ExpiryIndex()
         self._last_get: Dict[Tuple[int, str], float] = {}
         # (bucket, region) -> {obj: (last_get_time, size)} with no later GET yet
         self._open_last: Dict[Tuple[str, str], Dict[int, Tuple[float, float]]] = {}
@@ -136,9 +138,8 @@ class Simulator:
             rep.last_access, rep.ttl = now, ttl
             rep.expire = now + ttl
             rep.pinned = rep.pinned or pinned
-        rep.gen += 1
-        if not rep.pinned and np.isfinite(rep.expire):
-            heapq.heappush(self._heap, (rep.expire, oid, region, rep.gen))
+        self.expiry.arm((oid, region), (oid, region),
+                        INF if rep.pinned else rep.expire)
         return rep
 
     def _drop_replica(self, oid: int, obj: ObjectState, region: str, now: float,
@@ -146,26 +147,32 @@ class Simulator:
         rep = obj.replicas.pop(region, None)
         if rep is None:
             return
+        self.expiry.disarm((oid, region))
         self._charge_storage(obj, rep, now)
         if count_eviction:
             self.report.n_evictions += 1
 
-    def _process_expirations(self, now: float) -> None:
-        while self._heap and self._heap[0][0] <= now:
-            t, oid, region, gen = heapq.heappop(self._heap)
-            obj = self.objects.get(oid)
-            if obj is None:
-                continue
-            rep = obj.replicas.get(region)
-            if rep is None or rep.gen != gen or rep.pinned or rep.expire > t:
-                continue
-            if self.mode == "FP" and len(obj.replicas) <= self.min_fp_copies:
-                # Never evict the sole copy (§3.2.1) -- re-arm and keep paying.
-                rep.expire = t + max(rep.ttl, 3600.0)
-                rep.gen += 1
-                heapq.heappush(self._heap, (rep.expire, oid, region, rep.gen))
-                continue
-            self._drop_replica(oid, obj, region, t, count_eviction=True)
+    def _expire_one(self, t: float, ident: Tuple[int, str]) -> None:
+        """React to one expiry popped off the shared index (the spine's
+        EXPIRE handler): drop the replica, or re-arm the sole FP copy."""
+        oid, region = ident
+        obj = self.objects.get(oid)
+        rep = obj.replicas.get(region) if obj is not None else None
+        if rep is None or rep.pinned:
+            return
+        if rep.expire > t:
+            # Out-of-band mutation moved the expiry without re-arming
+            # (cannot happen through _add_replica); restore the schedule.
+            self.expiry.arm(ident, ident, rep.expire)
+            return
+        if self.mode == "FP" and len(obj.replicas) <= self.min_fp_copies:
+            # Never evict the sole copy (§3.2.1) -- re-arm and keep paying.
+            # If the new expiry is still due, the index pops it again within
+            # the same drain (the old "re-arm until clear" loop).
+            rep.expire = t + max(rep.ttl, 3600.0)
+            self.expiry.arm(ident, ident, rep.expire)
+            return
+        self._drop_replica(oid, obj, region, t, count_eviction=True)
 
     # -- policy-visible state ------------------------------------------------------
     def last_access_snapshot(self):
@@ -317,35 +324,37 @@ class Simulator:
     # -- main loop -------------------------------------------------------------------
     def run(self, trace) -> CostReport:
         """``trace`` is a :class:`repro.core.traces.Trace`; its events replay
-        as :mod:`repro.core.api` request objects through :meth:`dispatch`."""
+        as :mod:`repro.core.api` request objects through :meth:`dispatch`,
+        interleaved with timer/expiry events by the shared
+        :class:`~repro.core.engine.EventSpine` -- the same spine (and the
+        same :class:`~repro.core.expiry.ExpiryIndex` pop order) the live
+        replay driver consumes."""
         ev = trace.events
         self._horizon = float(ev["t"][-1]) if len(ev) else 0.0
         self.policy.reset()
         if self.policy.requires_oracle:
             self.policy.oracle = build_oracle(trace)
         span_epochs = None
+        epoch_len = None
         if isinstance(self.policy, SPANStore):
             span_epochs = build_epoch_summaries(trace, self.policy.epoch)
+            epoch_len = self.policy.epoch
 
-        next_tick = self.scan_interval
-        epoch_idx = -1
-        for req in trace.iter_requests():
-            t = float(req.at)
-            while next_tick <= t:
-                self._process_expirations(next_tick)
-                self.policy.periodic(next_tick, self)
-                next_tick += self.scan_interval
-            if span_epochs is not None:
-                e = int(t // self.policy.epoch)
-                if e != epoch_idx:
-                    epoch_idx = e
-                    gets, puts = span_epochs.get(e, ({}, {}))
-                    self.policy.solve_epoch(gets, puts)
-                    self._apply_spanstore_sets(t)
-            self._process_expirations(t)
-            self.dispatch(req)
+        spine = EventSpine(trace.iter_requests(), self.expiry,
+                           scan_interval=self.scan_interval,
+                           epoch_len=epoch_len, horizon=self._horizon)
+        for sev in spine:
+            if sev.kind == EXPIRE:
+                self._expire_one(sev.t, sev.ident)
+            elif sev.kind == DATA:
+                self.dispatch(sev.request)
+            elif sev.kind == TICK:
+                self.policy.periodic(sev.t, self)
+            elif sev.kind == EPOCH:
+                gets, puts = span_epochs.get(sev.epoch, ({}, {}))
+                self.policy.solve_epoch(gets, puts)
+                self._apply_spanstore_sets(sev.t)
 
-        self._process_expirations(self._horizon)
         for oid, obj in self.objects.items():
             for rep in obj.replicas.values():
                 self._charge_storage(obj, rep, min(rep.expire, self._horizon))

@@ -107,6 +107,10 @@ class VirtualStore:
     """Implements :class:`~repro.core.api.ObjectStoreAPI` over physical
     backends + the metadata control plane."""
 
+    #: Working-set bound for streaming multipart completion: parts are read
+    #: back and re-written in chunks of at most this many bytes.
+    mpu_chunk_size = 8 * 1024 * 1024
+
     def __init__(
         self,
         cost: CostModel,
@@ -216,59 +220,74 @@ class VirtualStore:
         in the simulator; their physical blobs are deleted here.
         """
         size = len(data)
-        oid = self._obj_id(op.key)
         if self.ledger is not None:
             self.ledger.count_put()
             self.ledger.charge_op(op.region, "PUT")
-        # Physical blobs of the version about to be superseded (LWW).
-        om = self.meta.objects.get((op.bucket, op.key))
-        stale = []
-        if om is not None and om.latest is not None:
-            stale = [(r, om.latest.version) for r in om.latest.replicas]
+        stale = self._stale_blobs(op.bucket, op.key)
         version = self.meta.begin_upload(op.bucket, op.key, op.region, size, now)
-        h = self.backends[op.region].put(op.bucket,
-                                         self._pkey(op.key, version), data)
+        pkey = self._pkey(op.key, version)
+        h = self.backends[op.region].put(op.bucket, pkey, data)
         self.meta.complete_upload(op.bucket, op.key, op.region, version,
                                   size, h.etag, now)
+        self._policy_put_mechanics(
+            op.bucket, op.key, op.region, size, h.etag, version, stale, now,
+            write_to=lambda dst: self.backends[dst].put(op.bucket, pkey, data),
+        )
+        return PutResponse(version, h.etag)
+
+    def _stale_blobs(self, bucket: str, key: str) -> List[Tuple[str, int]]:
+        """Physical blobs of the version a policy-mode PUT is about to
+        supersede (LWW)."""
+        om = self.meta.objects.get((bucket, key))
+        if om is None or om.latest is None:
+            return []
+        return [(r, om.latest.version) for r in om.latest.replicas]
+
+    def _policy_put_mechanics(
+        self, bucket: str, key: str, region: str, size: int, etag: str,
+        version: int, stale: List[Tuple[str, int]], now: float, write_to,
+    ) -> None:
+        """Post-commit placement mechanics shared by the bytes and streaming
+        PUT paths: LWW stale-blob deletes, §4.4 sync-to-base with a policy
+        TTL on the write-local copy, then policy replicate-on-write targets.
+        ``write_to(dst_region)`` performs the physical replication write."""
+        oid = self._obj_id(key)
         for r, v in stale:   # v < version always: begin_upload increments
-            self.backends[r].delete(op.bucket, self._pkey(op.key, v))
-        om = self.meta.objects[(op.bucket, op.key)]
+            self.backends[r].delete(bucket, self._pkey(key, v))
+        om = self.meta.objects[(bucket, key)]
         vm = om.latest
         base = om.base_region
-        if self.mode == "FB" and op.region != base:
+        if self.mode == "FB" and region != base:
             # Sync replication keeps the pinned base fresh (§4.4).
-            self.transfers.add(self.cost, op.region, base, size)
+            self.transfers.add(self.cost, region, base, size)
             if self.ledger is not None:
-                self.ledger.charge_transfer(op.region, base, size)
+                self.ledger.charge_transfer(region, base, size)
                 self.ledger.charge_op(base, "PUT")
                 self.ledger.count_replication()
-            self.backends[base].put(op.bucket, self._pkey(op.key, version), data)
-            self.meta.commit_replica(op.bucket, op.key, base, size, h.etag,
+            write_to(base)
+            self.meta.commit_replica(bucket, key, base, size, etag,
                                      now, ttl=float("inf"))
             # The write-local copy is a cache replica: give it a policy TTL.
-            ctx = GetContext(oid, op.bucket, op.region, base, float(size), now,
+            ctx = GetContext(oid, bucket, region, base, float(size), now,
                              hit=True, gap=None)
             ttl = self.policy.ttl_on_access(
-                ctx, self.meta.holders(op.bucket, op.key))
+                ctx, self.meta.holders(bucket, key))
             if ttl <= 0:
-                self._evict_replica(op.bucket, op.key, op.region, now)
+                self._evict_replica(bucket, key, region, now)
             else:
-                self.meta.touch_replica(op.bucket, op.key, op.region, now,
-                                        ttl=ttl)
-        for target in self.policy.replicate_on_write(oid, op.bucket, op.region,
+                self.meta.touch_replica(bucket, key, region, now, ttl=ttl)
+        for target in self.policy.replicate_on_write(oid, bucket, region,
                                                      float(size), now):
-            if target == op.region or target in vm.replicas:
+            if target == region or target in vm.replicas:
                 continue
-            self.transfers.add(self.cost, op.region, target, size)
+            self.transfers.add(self.cost, region, target, size)
             if self.ledger is not None:
-                self.ledger.charge_transfer(op.region, target, size)
+                self.ledger.charge_transfer(region, target, size)
                 self.ledger.charge_op(target, "PUT")
                 self.ledger.count_replication()
-            self.backends[target].put(op.bucket, self._pkey(op.key, version),
-                                      data)
-            self.meta.commit_replica(op.bucket, op.key, target, size, h.etag,
+            write_to(target)
+            self.meta.commit_replica(bucket, key, target, size, etag,
                                      now, ttl=float("inf"))
-        return PutResponse(version, h.etag)
 
     def _handle_get(self, op: GetRequest) -> GetResponse:
         """Cheapest-source GET + replicate-on-read (§2.3), with ranged and
@@ -294,7 +313,9 @@ class VirtualStore:
                         op.bucket, self._pkey(op.key, vm.version))
                 break
             except KeyError:
-                vm.replicas.pop(src, None)       # physical bytes lost
+                lost = vm.replicas.pop(src, None)    # physical bytes lost
+                if lost is not None:
+                    lost.unbind_index()
                 if self.ledger is not None:
                     self.ledger.on_replica_drop(op.bucket, op.key, src, now,
                                                 version=vm.version)
@@ -330,12 +351,14 @@ class VirtualStore:
         )
 
     # -- policy-driven placement (the Simulator's decision surface, live) -----
-    @staticmethod
-    def _obj_id(key: str):
-        """Trace object ids are numeric strings; policies key their state by
-        the integer id (as the Simulator does), so both planes index the same
-        statistics.  Non-numeric keys fall back to the key itself."""
-        return int(key) if key.isdigit() else key
+    def _obj_id(self, key: str) -> int:
+        """Dense integer object id for ``key`` (the metadata server's
+        :class:`~repro.core.expiry.KeyInterner`).  Numeric trace keys keep
+        their integer value -- the id the Simulator uses -- so both planes
+        index the same policy statistics; arbitrary string keys get stable
+        dense ids, so oracle-style per-object policies work beyond
+        trace-shaped keys."""
+        return self.meta.interner.intern(key)
 
     def _committed_count(self, vm) -> int:
         return sum(1 for m in vm.replicas.values() if m.status == COMMITTED)
@@ -510,7 +533,9 @@ class VirtualStore:
                     op.bucket, self._pkey(op.src_key, vm.version))
                 self.meta.touch_replica(op.bucket, op.src_key, op.region, now)
             except KeyError:
-                vm.replicas.pop(op.region, None)   # read-repair (§4.5)
+                lost = vm.replicas.pop(op.region, None)   # read-repair (§4.5)
+                if lost is not None:
+                    lost.unbind_index()
                 if self.ledger is not None:
                     self.ledger.on_replica_drop(op.bucket, op.src_key,
                                                 op.region, now,
@@ -569,15 +594,76 @@ class VirtualStore:
                 raise ApiError("InvalidPart", f"part {n} was never uploaded")
             if etag and etag.strip('"') != have[0]:
                 raise ApiError("InvalidPart", f"part {n} ETag mismatch")
-        blob = b"".join(
-            self.backends[mpu.region].get(mpu.bucket,
-                                          self._part_key(op.upload_id, n))
-            for n, _e in listed
-        )
-        put = self._handle_put(PutRequest(op.bucket, op.key, mpu.region,
-                                          body=blob, at=op.at))
+        # Streaming assembly: parts are read back in bounded chunks and piped
+        # straight into the destination blob, so completing an N-GB upload
+        # holds one chunk in proxy RAM -- never the whole object.
+        total = sum(mpu.parts[n][1] for n, _e in listed)
+        now = self._now(op)
+
+        def assembled():
+            src = self.backends[mpu.region]
+            step = self.mpu_chunk_size
+            for n, _e in listed:
+                pkey = self._part_key(op.upload_id, n)
+                psize = mpu.parts[n][1]
+                for off in range(0, psize, step):
+                    yield src.get(mpu.bucket, pkey,
+                                  (off, min(off + step, psize) - 1))
+
+        put = self._put_streamed(op.bucket, op.key, mpu.region, assembled(),
+                                 total, now)
         self._discard_mpu(op.upload_id)
-        return CompleteMultipartResponse(put.version, put.etag, len(blob))
+        return CompleteMultipartResponse(put.version, put.etag, total)
+
+    def _put_streamed(self, bucket: str, key: str, region: str, chunks,
+                      size: int, now: float) -> PutResponse:
+        """The PUT pipeline fed by a chunk iterator instead of one bytes
+        object (multipart completion).  Same 2PC + ledger + policy mechanics
+        as :meth:`_handle_put`; replication targets re-read the committed
+        local blob in bounded chunks, so nothing on this path ever
+        materializes the whole object in proxy RAM."""
+        if self.ledger is not None:
+            self.ledger.count_put()
+            self.ledger.charge_op(region, "PUT")
+        stale = self._stale_blobs(bucket, key) if self.policy is not None else []
+        version = self.meta.begin_upload(bucket, key, region, size, now)
+        pkey = self._pkey(key, version)
+        h = self.backends[region].put_stream(bucket, pkey, chunks)
+        self.meta.complete_upload(bucket, key, region, version, size,
+                                  h.etag, now)
+        if self.policy is not None:
+            def replicate_to(dst: str) -> None:
+                # Source from a region that still holds the blob: the
+                # mechanics may have already evicted the write-local copy
+                # (policy ttl <= 0) before replicate_on_write targets run.
+                src = self._holder_region(bucket, key, prefer=region)
+                self.backends[dst].put_stream(
+                    bucket, pkey, self._read_chunks(src, bucket, pkey, size))
+
+            self._policy_put_mechanics(
+                bucket, key, region, size, h.etag, version, stale, now,
+                write_to=replicate_to,
+            )
+        return PutResponse(version, h.etag)
+
+    def _holder_region(self, bucket: str, key: str, prefer: str) -> str:
+        """A region whose committed replica of the latest version still has
+        physical bytes (``prefer`` if it qualifies)."""
+        vm = self.meta.objects[(bucket, key)].latest
+        if prefer in vm.replicas and vm.replicas[prefer].status == COMMITTED:
+            return prefer
+        for r, m in vm.replicas.items():
+            if m.status == COMMITTED:
+                return r
+        raise ApiError("NoSuchKey", f"{bucket}/{key} has no committed replica")
+
+    def _read_chunks(self, region: str, bucket: str, pkey: str, size: int):
+        """Ranged reads of a committed blob in ``mpu_chunk_size`` steps --
+        the bounded-RAM replication source for streamed PUTs."""
+        be = self.backends[region]
+        step = self.mpu_chunk_size
+        for off in range(0, size, step):
+            yield be.get(bucket, pkey, (off, min(off + step, size) - 1))
 
     def _handle_abort_mpu(self, op: AbortMultipartRequest) -> Ack:
         self._discard_mpu(op.upload_id)
@@ -649,14 +735,29 @@ class VirtualStore:
         self.dispatch(AbortMultipartRequest(upload_id))
 
     # -- maintenance ---------------------------------------------------------------
-    def run_eviction_scan(self, now: Optional[float] = None) -> int:
-        """The §4.2 background process: metadata scan + physical DELETEs."""
+    def run_eviction_scan(self, now: Optional[float] = None,
+                          full_scan: bool = False) -> int:
+        """The §4.2 background process: metadata scan + physical DELETEs.
+        O(expired) off the shared expiry index; ``full_scan=True`` forces
+        the legacy O(objects) sweep (benchmark baseline only)."""
         now = self._clock() if now is None else now
-        victims = self.meta.scan_expired(now)
+        scan = self.meta.full_scan_expired if full_scan else self.meta.scan_expired
+        victims = scan(now)
         for bucket, key, region, version in victims:
             self.backends[region].delete(bucket, self._pkey(key, version))
         self.meta.expire_pending(now)
         return len(victims)
+
+    def expire_replica(self, ident, texp: float) -> bool:
+        """EXPIRE handler for the event spine (:mod:`repro.core.engine`):
+        apply one expiry already popped off ``meta.expiry`` -- metadata drop
+        plus the physical DELETE.  Returns True if a replica was dropped."""
+        victim = self.meta.expire_replica(ident, texp)
+        if victim is None:
+            return False
+        bucket, key, region, version = victim
+        self.backends[region].delete(bucket, self._pkey(key, version))
+        return True
 
     def backup_metadata(self, bucket: str, region: str) -> None:
         """Checkpoint the control plane *into* the object layer (§4.5)."""

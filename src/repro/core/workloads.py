@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import math
 import zlib
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -312,9 +312,39 @@ WORKLOADS = {
 
 WORKLOAD_NAMES = tuple(WORKLOADS)
 
+#: Size tiers: parameter overrides per workload.  The golden replay matrix
+#: runs the (default) small tier; the "large" tier (>= 100k events,
+#: >= 10k objects) is the replay-throughput benchmark scale -- the event
+#: spine keeps the live plane O(expired) per event there, where the old
+#: per-event eviction scan was O(objects) (see benchmarks/run.py).
+WORKLOAD_TIERS: Dict[str, Dict[str, dict]] = {
+    "large": {
+        "zipfian": dict(n_objects=10_000, n_requests=100_000, n_buckets=8,
+                        duration=30 * DAY),
+        "hotspot_shift": dict(n_objects=10_000, n_requests=100_000,
+                              n_phases=8, n_buckets=8, duration=30 * DAY),
+        "diurnal": dict(n_objects=10_000, n_requests=100_000, n_buckets=8,
+                        duration=30 * DAY),
+        "write_heavy": dict(n_objects=10_000, n_requests=100_000,
+                            n_buckets=8, duration=30 * DAY),
+        "scan_backup": dict(n_objects=10_000, n_random_reads=40_000,
+                            n_buckets=8, duration=14 * DAY),
+    },
+}
+
 
 def make_workload(name: str, regions: Sequence[str], seed: int = 0,
-                  **kw) -> Trace:
+                  tier: Optional[str] = None, **kw) -> Trace:
+    """Generate workload ``name``.  ``tier`` selects a named parameter set
+    from :data:`WORKLOAD_TIERS` (e.g. ``"large"``); explicit keyword
+    arguments override the tier's parameters."""
     if name not in WORKLOADS:
         raise KeyError(f"unknown workload {name!r}; have {WORKLOAD_NAMES}")
-    return WORKLOADS[name](regions, seed=seed, **kw)
+    params: dict = {}
+    if tier is not None:
+        if tier not in WORKLOAD_TIERS:
+            raise KeyError(f"unknown tier {tier!r}; have "
+                           f"{tuple(WORKLOAD_TIERS)}")
+        params.update(WORKLOAD_TIERS[tier].get(name, {}))
+    params.update(kw)
+    return WORKLOADS[name](regions, seed=seed, **params)

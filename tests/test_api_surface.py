@@ -558,3 +558,81 @@ def test_http_multipart_with_manifest_validation(proxies):
     assert _req("GET", f"{pa.endpoint}/mp/obj")[1] == b"PART-ONE|PART-TWO"
     # completing again: the upload is gone
     assert _code("POST", f"{pa.endpoint}/mp/obj?uploadId={uid}", data=good) == 404
+
+
+# ---------------------------------------------------------------------------
+# Streaming multipart completion (bounded-chunk assembly)
+# ---------------------------------------------------------------------------
+
+class _ChunkWatcher:
+    """Wraps put_stream chunk iterators to record the largest single buffer
+    that ever passed through the assembly path."""
+
+    def __init__(self):
+        self.max_chunk = 0
+        self.n_chunks = 0
+
+    def watch(self, chunks):
+        for c in chunks:
+            self.max_chunk = max(self.max_chunk, len(c))
+            self.n_chunks += 1
+            yield c
+
+
+def test_multipart_completion_streams_in_bounded_chunks(store):
+    """Completing an upload whose parts are larger than the chunk size must
+    assemble via bounded chunks -- the proxy never materializes the whole
+    object (or even one whole part) in a single buffer."""
+    cat, be, vs, _clk = store
+    a = cat.region_names()[0]
+    vs.mpu_chunk_size = 1024                     # shrink the bound for the test
+    watcher = _ChunkWatcher()
+    orig = be[a].put_stream
+    be[a].put_stream = lambda bucket, key, chunks: orig(
+        bucket, key, watcher.watch(chunks))
+
+    # three parts, each 3x the chunk size (+ a ragged tail on the last)
+    payload = [bytes([65 + i]) * (3 * 1024 + (7 if i == 2 else 0))
+               for i in range(3)]
+    uid = vs.dispatch(CreateMultipartRequest("b", "huge", a)).upload_id
+    etags = [vs.dispatch(UploadPartRequest(uid, i + 1, p)).etag
+             for i, p in enumerate(payload)]
+    r = vs.dispatch(CompleteMultipartRequest(
+        "b", "huge", a, uid, parts=list(zip(range(1, 4), etags))))
+
+    want = b"".join(payload)
+    assert r.size == len(want)
+    assert vs.get_object("b", "huge", a) == want
+    assert watcher.n_chunks >= 9                 # 3 parts x >=3 chunks each
+    assert 0 < watcher.max_chunk <= 1024         # the working-set bound
+    # spill space reclaimed as before
+    assert [h.key for h in be[a].list("b", MPU_PREFIX)] == []
+
+
+def test_multipart_streaming_policy_mode_replicates_cross_region(tmp_path):
+    """Streamed completion drives the same policy-mode PUT mechanics: a
+    cross-region MPU syncs to the pinned FB base via bounded-chunk
+    replication, on real filesystem backends (FSBackend.put_stream writes
+    incrementally)."""
+    from repro.core import MetadataServer, make_backends
+
+    cat = pick_regions(3)
+    a, b, _c = cat.region_names()
+    be = make_backends(list(cat.region_names()), "fs", root=str(tmp_path))
+    meta = MetadataServer(cat, mode="FB", versioning=False)
+    vs = VirtualStore(cat, be, meta, mode="FB",
+                      policy=make_policy("always_store", cat))
+    vs.mpu_chunk_size = 512
+    vs.create_bucket("b")
+    vs.dispatch(PutRequest("b", "9", a, body=b"seed", at=0.0))  # base at a
+
+    uid = vs.dispatch(CreateMultipartRequest("b", "9", b, at=1.0)).upload_id
+    part = bytes(range(256)) * 8                 # 2048 B > chunk size
+    vs.dispatch(UploadPartRequest(uid, 1, part))
+    vs.dispatch(CompleteMultipartRequest("b", "9", b, uid, at=2.0))
+
+    # overwrite committed at b AND synced to the pinned base at a (§4.4)
+    assert vs.get_object("b", "9", a) == part
+    assert vs.get_object("b", "9", b) == part
+    om = meta.objects[("b", "9")]
+    assert om.base_region == a and om.latest.replicas[a].pinned

@@ -1,0 +1,412 @@
+"""Shared expiry-engine coverage (repro.core.expiry + repro.core.engine):
+
+  * ExpiryIndex pops armed entries in (expire, oid, region) order, skipping
+    superseded entries via generation tokens -- checked against a
+    brute-force reference over random arm/disarm/re-arm sequences;
+  * force-expire mutation compatibility: directly assigning a ReplicaMeta's
+    ``ttl`` / ``last_access`` / ``pinned`` fields (the pattern existing
+    tests use) re-indexes the replica, so the O(expired) scan collects
+    exactly what the legacy full sweep would have;
+  * EventSpine ordering contract: expiry pops before ticks, ticks before
+    epoch boundaries, epoch boundaries before the pre-event drain, data
+    events last; inclusive boundaries throughout;
+  * stable key interning: replaying the same logical trace with numeric
+    keys vs arbitrary string keys produces identical live-plane routing
+    decisions and bills (oracle-style per-object policies included).
+
+Property-style tests run with hypothesis when installed and via
+deterministic numpy sampling otherwise.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.backends import InMemoryBackend
+from repro.core.costmodel import CostModel, Region, pick_regions
+from repro.core.engine import DATA, END, EPOCH, EXPIRE, TICK, EventSpine
+from repro.core.expiry import ExpiryIndex, KeyInterner
+from repro.core.metadata import MetadataServer, ReplicaMeta
+from repro.core.replay import run_live_plane
+from repro.core.simulator import OP_DELETE, OP_GET, OP_PUT
+from repro.core.traces import EVENT_DTYPE, Trace
+from repro.core.workloads import make_workload
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# ExpiryIndex unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_pop_order_is_expire_then_oid_then_region():
+    idx = ExpiryIndex()
+    idx.arm((2, "b"), (2, "b"), 10.0)
+    idx.arm((1, "b"), (1, "b"), 10.0)
+    idx.arm((1, "a"), (1, "a"), 10.0)
+    idx.arm((0, "z"), (0, "z"), 5.0)
+    got = list(idx.pop_due(10.0))
+    assert got == [(5.0, (0, "z")), (10.0, (1, "a")),
+                   (10.0, (1, "b")), (10.0, (2, "b"))]
+    assert len(idx) == 0
+
+
+def test_rearm_supersedes_and_disarm_cancels():
+    idx = ExpiryIndex()
+    idx.arm("x", (1, "r"), 5.0)
+    idx.arm("x", (1, "r"), 50.0)        # re-arm later: the 5.0 entry is stale
+    assert list(idx.pop_due(10.0)) == []
+    assert idx.n_stale == 1
+    assert idx.armed_expire("x") == 50.0
+    idx.disarm("x")
+    assert list(idx.pop_due(100.0)) == []
+    assert idx.peek() is None
+
+
+def test_infinite_expiry_never_schedules():
+    idx = ExpiryIndex()
+    idx.arm("x", (1, "r"), INF)
+    assert len(idx) == 0 and idx.peek() is None
+    idx.arm("x", (1, "r"), 7.0)         # finite re-arm schedules it
+    assert idx.peek() == 7.0
+    idx.arm("x", (1, "r"), INF)         # back to pinned/TTL-less: cancelled
+    assert list(idx.pop_due(1e18)) == []
+
+
+def test_rearm_during_drain_pops_again():
+    """The lazy-heap form of the FP 're-arm until clear' loop: a consumer
+    re-arming inside pop_due sees the new deadline pop in the same drain."""
+    idx = ExpiryIndex()
+    idx.arm("x", (0, "r"), 1.0)
+    seen = []
+    for t, ident in idx.pop_due(10.0):
+        seen.append(t)
+        if t < 4.0:
+            idx.arm(ident, (0, "r"), t + 2.0)
+    assert seen == [1.0, 3.0, 5.0]
+    assert idx.armed_expire("x") is None
+
+
+def _check_index_against_reference(ops):
+    """ops: list of (ident_int, expire_or_None).  None = disarm.  After
+    applying all, pop_due(now) must return exactly the armed entries with
+    expire <= now, sorted by (expire, ident)."""
+    idx = ExpiryIndex()
+    ref = {}
+    for ident, expire in ops:
+        if expire is None:
+            idx.disarm(ident)
+            ref.pop(ident, None)
+        else:
+            idx.arm(ident, (ident, "r"), expire)
+            if np.isfinite(expire):
+                ref[ident] = expire
+            else:
+                ref.pop(ident, None)
+    now = 50.0
+    want = sorted(((e, i) for i, e in ref.items() if e <= now))
+    assert list(idx.pop_due(now)) == want
+    # whatever survives is exactly the > now remainder
+    assert sorted(idx._armed.items()) == sorted(
+        (i, e) for i, e in ref.items() if e > now)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_index_matches_reference_property(seed):
+    rng = np.random.default_rng(seed * 131 + 17)
+    ops = []
+    for _ in range(int(rng.integers(5, 60))):
+        ident = int(rng.integers(0, 8))
+        kind = rng.random()
+        if kind < 0.15:
+            ops.append((ident, None))
+        elif kind < 0.25:
+            ops.append((ident, INF))
+        else:
+            ops.append((ident, float(np.round(rng.random() * 100.0, 3))))
+    _check_index_against_reference(ops)
+
+
+if HAVE_HYPOTHESIS:
+    _op = st.tuples(st.integers(0, 7),
+                    st.one_of(st.none(), st.just(INF),
+                              st.floats(0.0, 100.0, allow_nan=False)))
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(_op, min_size=1, max_size=60))
+    def test_index_matches_reference_hypothesis(ops):
+        _check_index_against_reference(ops)
+
+
+# ---------------------------------------------------------------------------
+# Force-expire mutation compatibility (ReplicaMeta property re-indexing)
+# ---------------------------------------------------------------------------
+
+def _tiny_cat(n=3) -> CostModel:
+    regions = [Region(f"aws:{c}", 10.0) for c in "abc"[:n]]
+    eg = {(a.name, b.name): 0.01 for a in regions for b in regions
+          if a.name != b.name}
+    return CostModel(regions, eg)
+
+
+def test_mutating_replica_fields_reindexes():
+    cat = _tiny_cat()
+    ms = MetadataServer(cat, mode="FB", versioning=False)
+    ms.create_bucket("b")
+    v = ms.begin_upload("b", "k", "aws:a", 10, now=0.0)
+    ms.complete_upload("b", "k", "aws:a", v, 10, "e", now=0.0)
+    ms.commit_replica("b", "k", "aws:b", 10, "e", now=0.0, ttl=1e9)
+    rm = ms.objects[("b", "k")].latest.replicas["aws:b"]
+    ident = ("b", "k", v, "aws:b")
+    assert ms.expiry.armed_expire(ident) == 1e9
+    rm.ttl = 5.0                         # force-expire: ttl mutation re-arms
+    assert ms.expiry.armed_expire(ident) == 5.0
+    rm.last_access = 100.0               # and so does last_access
+    assert ms.expiry.armed_expire(ident) == 105.0
+    rm.pinned = True                     # pinning cancels the schedule
+    assert ms.expiry.armed_expire(ident) is None
+    rm.pinned = False
+    assert ms.expiry.armed_expire(ident) == 105.0
+
+
+def _random_meta_mutation_check(seed_steps):
+    """Build a metadata table, apply random direct field mutations (the
+    force-expire pattern), then check the O(expired) scan returns exactly
+    what the legacy full sweep computes on an identical twin table."""
+    cat = _tiny_cat()
+
+    def build():
+        ms = MetadataServer(cat, mode="FB", versioning=False)
+        ms.create_bucket("b")
+        for oid in range(4):
+            key = str(oid)
+            v = ms.begin_upload("b", key, "aws:a", 10, now=0.0)
+            ms.complete_upload("b", key, "aws:a", v, 10, "e", now=0.0)
+            for r in ("aws:b", "aws:c"):
+                ms.commit_replica("b", key, r, 10, "e", now=0.0, ttl=1e9)
+        return ms
+
+    fast, slow = build(), build()
+    for (oid, region, field, value) in seed_steps:
+        for ms in (fast, slow):
+            rm = ms.objects[("b", str(oid))].latest.replicas.get(region)
+            if rm is None:
+                continue
+            setattr(rm, field, value)
+    now = 500.0
+    got = fast.scan_expired(now)
+    want = slow.full_scan_expired(now)
+    assert sorted(got) == sorted(want), (got, want)
+    assert fast.scan_expired(now) == []          # drained: scan is idempotent
+    # surviving replica sets agree exactly
+    for key in fast.objects:
+        assert set(fast.objects[key].latest.replicas) == \
+            set(slow.objects[key].latest.replicas), key
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_force_expire_scan_matches_full_sweep_property(seed):
+    rng = np.random.default_rng(seed * 977 + 5)
+    fields = ["ttl", "last_access", "pinned"]
+    steps = []
+    for _ in range(int(rng.integers(1, 16))):
+        field = fields[int(rng.integers(0, 3))]
+        value = (bool(rng.integers(0, 2)) if field == "pinned"
+                 else float(np.round(rng.random() * 1000.0, 2)))
+        steps.append((int(rng.integers(0, 4)),
+                      ["aws:a", "aws:b", "aws:c"][int(rng.integers(0, 3))],
+                      field, value))
+    _random_meta_mutation_check(steps)
+
+
+if HAVE_HYPOTHESIS:
+    _mut = st.tuples(
+        st.integers(0, 3),
+        st.sampled_from(["aws:a", "aws:b", "aws:c"]),
+        st.sampled_from(["ttl", "last_access", "pinned"]),
+        st.one_of(st.booleans(), st.floats(0.0, 1000.0, allow_nan=False)),
+    )
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(_mut, min_size=1, max_size=16))
+    def test_force_expire_scan_matches_full_sweep_hypothesis(steps):
+        steps = [(o, r, f, bool(v) if f == "pinned" else float(v))
+                 for (o, r, f, v) in steps]
+        _random_meta_mutation_check(steps)
+
+
+# ---------------------------------------------------------------------------
+# EventSpine ordering contract
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Req:
+    at: float
+
+
+def test_spine_ordering_contract():
+    idx = ExpiryIndex()
+    idx.arm("early", (0, "r"), 50.0)      # before the first tick
+    idx.arm("at_tick", (1, "r"), 100.0)   # exactly at the tick boundary
+    idx.arm("mid", (2, "r"), 150.0)       # between tick and the data event
+    idx.arm("tail", (3, "r"), 250.0)      # after the last event: horizon pop
+    idx.arm("beyond", (4, "r"), 400.0)    # past the horizon: never pops
+    spine = EventSpine([_Req(120.0), _Req(200.0)], idx,
+                       scan_interval=100.0, epoch_len=200.0, horizon=300.0)
+    got = [(e.kind, e.t) for e in spine]
+    assert got == [
+        (EXPIRE, 50.0),     # drained before the tick it precedes
+        (EXPIRE, 100.0),    # due exactly at the tick: pops first
+        (TICK, 100.0),
+        (EPOCH, 120.0),     # epoch 0 announced at the first data event
+        (DATA, 120.0),      # nothing due in (100, 120]
+        (EXPIRE, 150.0),    # pre-event drain of the 200.0 data event,
+        (TICK, 200.0),      # after its tick fired
+        (EPOCH, 200.0),     # epoch 1 (200//200) fires before the drain
+        (DATA, 200.0),
+        (EXPIRE, 250.0),    # horizon drain pops what is due <= horizon...
+        (END, 300.0),       # ...then the stream closes at the horizon
+    ]
+    # the past-horizon entry is still armed (its storage is charged capped
+    # at the horizon by the end-of-run flush, never dropped by the spine)
+    assert idx.armed_expire("beyond") == 400.0
+
+
+def test_spine_without_epochs_or_ticks_due():
+    idx = ExpiryIndex()
+    spine = EventSpine([_Req(1.0)], idx, scan_interval=100.0, horizon=1.0)
+    assert [(e.kind, e.t) for e in spine] == [(DATA, 1.0), (END, 1.0)]
+
+
+# ---------------------------------------------------------------------------
+# Stable key interning: string keys replay like numeric keys
+# ---------------------------------------------------------------------------
+
+def test_interner_numeric_passthrough_and_dense_strings():
+    it = KeyInterner()
+    assert it.intern("17") == 17                  # simulator-compatible
+    a, b = it.intern("alpha"), it.intern("beta/2")
+    assert a == KeyInterner.BASE and b == KeyInterner.BASE + 1
+    assert it.intern("alpha") == a                # stable across calls
+    assert len(it) == 2
+
+
+class _RenamedKeyTrace(Trace):
+    """The same logical trace with every numeric key spelled as an
+    arbitrary string -- what a live client (no trace discipline) sends."""
+
+    def iter_requests(self):
+        for req in super().iter_requests():
+            if hasattr(req, "key"):
+                req = dataclasses.replace(
+                    req, key=f"obj-{req.key}.bin")
+            yield req
+
+
+@pytest.mark.parametrize("policy", ["ttl_cc_obj", "ewma"])
+def test_string_keys_replay_identically_to_numeric(policy):
+    """Per-object policies (state keyed by the interned object id) must
+    take the same decisions whether keys are numeric trace ids or strings:
+    same (region, src, hit) per GET, same bill."""
+    cost = pick_regions(3)
+    tr = make_workload("zipfian", cost.region_names(), seed=11,
+                       n_objects=40, n_requests=400)
+    renamed = _RenamedKeyTrace(tr.name, tr.events, tr.regions, tr.buckets)
+    rep_n, dec_n, hold_n = run_live_plane(tr, cost, policy)
+    rep_s, dec_s, hold_s = run_live_plane(renamed, cost, policy)
+    assert len(dec_n) == len(dec_s) > 0
+    for a, b in zip(dec_n, dec_s):
+        # (t, oid, region, src, hit): oids differ by construction
+        assert (a[0], a[2], a[3], a[4]) == (b[0], b[2], b[3], b[4])
+    assert rep_n.components() == rep_s.components()
+    assert rep_n.counters() == rep_s.counters()
+    assert len(hold_n) == len(hold_s)
+    assert sorted(hold_n.values()) == sorted(hold_s.values())
+
+
+def test_string_keys_expire_through_the_shared_index():
+    """A policy-mode store with non-numeric keys arms/expires replicas via
+    the interned ids: cache-on-read then TTL lapse evicts on the scan."""
+    from repro.core.api import GetRequest, PutRequest
+    from repro.core.policies import make_policy
+    from repro.core.virtual_store import VirtualStore
+    cat = _tiny_cat(2)
+    meta = MetadataServer(cat, mode="FB", versioning=False)
+    backends = {r: InMemoryBackend(r) for r in cat.region_names()}
+    store = VirtualStore(cat, backends, meta, mode="FB",
+                         policy=make_policy("t_even", cat))
+    store.create_bucket("b")
+    store.dispatch(PutRequest("b", "checkpoints/step-1", "aws:a",
+                              body=b"w" * 128, at=0.0))
+    r = store.dispatch(GetRequest("b", "checkpoints/step-1", "aws:b", at=10.0))
+    assert not r.hit
+    assert len(meta.expiry) == 1                  # cache copy armed
+    assert store.run_eviction_scan(now=1e9) == 1  # heap pop, not a sweep
+    assert store.replica_regions("b", "checkpoints/step-1") == ["aws:a"]
+
+
+# ---------------------------------------------------------------------------
+# Guarded-pop re-arm (non-FP sole copy) and streamed-replication sourcing
+# ---------------------------------------------------------------------------
+
+def test_fb_guarded_sole_copy_collected_after_sibling_commit():
+    """FB mode: if the pinned base is lost (read-repair) the expired cache
+    copy becomes a guarded sole copy -- its pop is consumed undropped.  A
+    later sibling commit must lift the guard and reschedule it, exactly as
+    the legacy full sweep (which re-examined every replica) behaved."""
+    cat = _tiny_cat()
+    ms = MetadataServer(cat, mode="FB", versioning=False)
+    ms.create_bucket("b")
+    v = ms.begin_upload("b", "k", "aws:a", 10, now=0.0)
+    ms.complete_upload("b", "k", "aws:a", v, 10, "e", now=0.0)   # pinned base
+    ms.commit_replica("b", "k", "aws:b", 10, "e", now=0.0, ttl=50.0)
+    vm = ms.objects[("b", "k")].latest
+    vm.replicas.pop("aws:a").unbind_index()      # outage: base bytes lost
+    assert ms.scan_expired(now=100.0) == []      # sole copy: guarded, kept
+    assert set(vm.replicas) == {"aws:b"}
+    ms.commit_replica("b", "k", "aws:c", 10, "e", now=200.0, ttl=1e9)
+    assert ms.scan_expired(now=200.0) == [("b", "k", "aws:b", v)]
+    assert set(vm.replicas) == {"aws:c"}
+
+
+def test_streamed_mpu_replicates_after_local_eviction():
+    """A policy combining ttl<=0 (evict the write-local copy during the
+    sync-to-base mechanics) with replicate-on-write targets: the streamed
+    completion path must source replication chunks from a surviving
+    replica, not the just-deleted local blob."""
+    from repro.core.api import (CompleteMultipartRequest,
+                                CreateMultipartRequest, PutRequest,
+                                UploadPartRequest)
+    from repro.core.policies import ReplicateOnWrite
+    from repro.core.virtual_store import VirtualStore
+
+    class EvictingReplicator(ReplicateOnWrite):
+        def ttl_on_access(self, ctx, holders):
+            return 0.0                           # never keep a cache copy
+
+    cat = _tiny_cat()
+    a, b, c = cat.region_names()
+    meta = MetadataServer(cat, mode="FB", versioning=False)
+    backends = {r: InMemoryBackend(r) for r in cat.region_names()}
+    store = VirtualStore(cat, backends, meta, mode="FB",
+                         policy=EvictingReplicator(cat, name="evict_repl"))
+    store.mpu_chunk_size = 256
+    store.create_bucket("b")
+    store.dispatch(PutRequest("b", "5", a, body=b"seed", at=0.0))  # base at a
+
+    uid = store.dispatch(CreateMultipartRequest("b", "5", b, at=1.0)).upload_id
+    part = bytes(range(256)) * 4                 # 1 KiB > chunk size
+    store.dispatch(UploadPartRequest(uid, 1, part))
+    r = store.dispatch(CompleteMultipartRequest("b", "5", b, uid, at=2.0))
+    assert r.size == len(part)
+    # write-local copy at b was evicted (ttl<=0); base + third region hold it
+    assert store.replica_regions("b", "5") == sorted([a, c])
+    assert backends[a].get("b", f"5@v{r.version}") == part
+    assert backends[c].get("b", f"5@v{r.version}") == part

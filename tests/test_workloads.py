@@ -118,3 +118,37 @@ def test_hotspot_shifts_read_region():
 def test_unknown_workload_raises():
     with pytest.raises(KeyError):
         make_workload("nope", REGIONS)
+
+
+# ---------------------------------------------------------------------------
+# Size tiers
+# ---------------------------------------------------------------------------
+
+def test_large_tier_meets_scale_floor_and_invariants():
+    """The 'large' tier (the replay-throughput benchmark scale) must carry
+    >= 100k events over >= 10k objects and still satisfy every replay
+    invariant the golden tier guarantees."""
+    tr = make_workload("zipfian", REGIONS, seed=7, tier="large")
+    ev = tr.events
+    assert len(ev) >= 100_000
+    assert len(np.unique(ev["obj"][ev["op"] != OP_LIST])) >= 10_000
+    assert (np.diff(ev["t"]) > 0).all()
+    seen, dead = set(), set()
+    for e in ev:
+        op, obj = int(e["op"]), int(e["obj"])
+        if op == OP_LIST:
+            continue
+        assert obj not in dead
+        if obj not in seen:
+            assert op == OP_PUT
+            seen.add(obj)
+        if op == OP_DELETE:
+            dead.add(obj)
+
+
+def test_tier_overrides_and_unknown_tier():
+    tr = make_workload("zipfian", REGIONS, seed=1, tier="large", n_objects=50,
+                       n_requests=200)
+    assert len(np.unique(tr.events["obj"])) <= 50   # kwargs beat the tier
+    with pytest.raises(KeyError):
+        make_workload("zipfian", REGIONS, tier="gigantic")
