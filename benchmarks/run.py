@@ -17,6 +17,15 @@ import time
 from benchmarks import kernel_bench, paper_tables
 
 
+#: CI floor for ``replay_events_per_sec`` on the (reduced-size) large tier.
+#: The spine path sustains ~4-8k events/sec on developer machines and CI
+#: runners; the retired-in-waiting ``full_scan_expired`` baseline manages a
+#: few hundred.  Pinning a floor well above the baseline's ceiling means the
+#: baseline can be deleted without losing the regression signal: any change
+#: that silently reintroduces O(objects) per-event work trips this gate.
+SMOKE_REPLAY_EVENTS_PER_SEC_FLOOR = 1500
+
+
 def _emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
@@ -123,11 +132,13 @@ def smoke() -> int:
     if rt["expiry_pops"] <= 0:
         failures.append("live replay popped no expirations off the shared "
                         "index (spine not draining the ExpiryIndex?)")
-    if rt["live_events_per_sec"] < 500:
+    if rt["live_events_per_sec"] < SMOKE_REPLAY_EVENTS_PER_SEC_FLOOR:
         failures.append(
-            f"live replay throughput collapsed: "
-            f"{rt['live_events_per_sec']:.0f} events/sec (O(objects) "
-            f"per-event work crept back into the hot path?)")
+            f"replay_events_per_sec fell below the pinned floor: "
+            f"{rt['live_events_per_sec']:.0f} < "
+            f"{SMOKE_REPLAY_EVENTS_PER_SEC_FLOOR} events/sec on the large "
+            f"tier (O(objects) per-event work crept back into the spine "
+            f"path?)")
 
     if failures:
         for f in failures:

@@ -8,6 +8,9 @@ Public surface:
   histogram      -- 800-cell variable-granularity access histograms
   ttl_policy     -- ExpectedCost(TTL), argmin scan, adaptive controller
   policies       -- SkyStore + every §6.2.2 baseline
+  oracle         -- trace-backed future knowledge (TraceOracle) for the
+                    clairvoyant baselines (CGP, SPANStore), shared by both
+                    verification planes
   simulator      -- event-driven monetary-cost simulator
   expiry         -- the shared lazy-expiration index (ExpiryIndex): one
                     min-expiry heap both planes pop in identical order
@@ -63,6 +66,7 @@ from .engine import EventSpine, SpineEvent  # noqa: F401
 from .expiry import ExpiryIndex, KeyInterner  # noqa: F401
 from .histogram import AccessHistogram, RollingHistogram, cell_edges  # noqa: F401
 from .ledger import CostLedger, CostReport  # noqa: F401
+from .oracle import TraceOracle  # noqa: F401
 from .policies import Policy, make_policy  # noqa: F401
 # NOTE: repro.core.replay (the differential replay driver) is deliberately
 # not imported here so `python -m repro.core.replay` stays runpy-clean;

@@ -198,6 +198,12 @@ class GetResponse:
     content_range: Optional[Tuple[int, int, int]] = None  # (start, end, total)
     source_region: Optional[str] = None
     hit: bool = True
+    #: Post-GET placement choice taken by the serving store -- "store"/"skip"
+    #: on a miss (replicate-on-read or not), "keep"/"evict" on a hit
+    #: (TTL re-arm vs. evict-now).  Internal observability for the
+    #: differential replay harness (covers clairvoyant CGP decisions);
+    #: never serialized on the S3 wire.
+    placement_action: Optional[str] = None
 
 
 @dataclasses.dataclass

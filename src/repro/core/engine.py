@@ -29,6 +29,13 @@ driver loops exactly):
 
 After the last data event, remaining due expiries pop at the horizon and a
 final ``END`` event closes the stream (storage flush / ledger finalize).
+
+Paper anchors: the lazy TTL expiration being sequenced here is §3.2's
+"expiration happens lazily off a heap" machinery; the reason one shared
+spine matters is §5's differential claim -- "simulated costs match what the
+live path would be billed" is only checkable if both planes observe timers
+in one order.  See :mod:`repro.core.replay` for a worked example pushing a
+workload through both spine consumers and diffing the result.
 """
 
 from __future__ import annotations

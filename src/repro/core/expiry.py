@@ -27,6 +27,13 @@ Design notes:
   disarm+re-arm can never resurrect an old entry.
 * Infinite (or pinned -- callers arm those as ``inf``) expiries are recorded
   as "not scheduled": they hold no heap entry and never pop.
+
+Paper anchors: §3.2 ("expiration of an object's replica is performed lazily")
+is the semantics implemented here; §5's differential claim is why there is
+exactly *one* implementation -- the golden replay matrix
+(:mod:`repro.core.replay`, which has a worked both-planes example in its
+module docstring) would show any pop-order disagreement as placement
+divergence.
 """
 
 from __future__ import annotations

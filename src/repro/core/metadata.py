@@ -172,12 +172,18 @@ class MetadataServer:
         versioning: bool = True,
         ledger: Optional[CostLedger] = None,
         min_fp_copies: int = 1,
+        oracle=None,
     ) -> None:
         self.cost = cost
         self.mode = mode
         self.ctl = controller or AdaptiveTTLController(cost)
         self.pending_timeout = pending_timeout
         self.versioning = versioning
+        #: Optional future-knowledge attachment point (§3.1.1): trace replay
+        #: parks the shared :class:`~repro.core.oracle.TraceOracle` here (the
+        #: VirtualStore forwards its own), so clairvoyant policies and
+        #: control-plane tooling read one oracle instance per replay.
+        self.oracle = oracle
         #: FP-mode safety floor: the eviction scan never drops below this
         #: many committed copies (same knob as Simulator.min_fp_copies).
         self.min_fp_copies = min_fp_copies

@@ -46,6 +46,12 @@ class Oracle:
 
     ``next_access[(obj, region)]`` is the sorted array of GET times of ``obj``
     at ``region``; :meth:`next_get_after` binary-searches it.
+
+    The concrete trace-backed implementation both verification planes share
+    is :class:`repro.core.oracle.TraceOracle` (built once from the
+    :class:`~repro.core.traces.Trace` before replay); policies with
+    ``requires_oracle = True`` refuse to run on the live plane until one is
+    attached (``VirtualStore(policy=..., oracle=...)``).
     """
 
     def __init__(self, next_access: Dict[Tuple[int, str], np.ndarray]):
@@ -61,12 +67,21 @@ class Oracle:
     def gets_in_window(
         self, region: str, t0: float, t1: float
     ) -> Dict[int, Tuple[int, float]]:
-        raise NotImplementedError  # provided by the simulator's epoch oracle
+        raise NotImplementedError  # implemented by TraceOracle
 
 
 class Policy:
     name = "base"
     requires_oracle = False
+    #: Epoch-solver interval in seconds (None = no epochs).  A policy that
+    #: sets this must implement ``solve_epoch(get_bytes, put_bytes)`` and
+    #: expose ``replica_sets``; the event spine then emits EPOCH boundaries
+    #: every ``epoch`` seconds and both planes re-run the solver there,
+    #: feeding it the upcoming epoch's workload from an attached oracle
+    #: (``TraceOracle.from_trace(trace, epoch_len=policy.epoch)`` -- the
+    #: simulator builds one automatically, the live VirtualStore refuses to
+    #: construct without one).  SPANStore is the one such policy today.
+    epoch: Optional[float] = None
 
     def __init__(self, cost: CostModel):
         self.cost = cost
@@ -148,12 +163,12 @@ class ReplicateOnWrite(Policy):
         return INF
 
 
-def aws_multi_region(cost: CostModel) -> ReplicateOnWrite:
-    return ReplicateOnWrite(cost, None, name="aws_mrb")
+def aws_multi_region(cost: CostModel, **kw) -> ReplicateOnWrite:
+    return ReplicateOnWrite(cost, name="aws_mrb", **kw)
 
 
-def juicefs(cost: CostModel) -> ReplicateOnWrite:
-    return ReplicateOnWrite(cost, None, name="juicefs")
+def juicefs(cost: CostModel, **kw) -> ReplicateOnWrite:
+    return ReplicateOnWrite(cost, name="juicefs", **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -477,23 +492,29 @@ POLICY_ALIASES = {
 }
 
 
+#: Every registered policy, keyed by its canonical table name (the name the
+#: golden-matrix fixtures and the paper tables use).
+POLICY_REGISTRY = {
+    "always_evict": AlwaysEvict,
+    "always_store": AlwaysStore,
+    "t_even": TevenPolicy,
+    "ewma": EWMAPolicy,
+    "ttl_cc": TTLCC,
+    "ttl_cc_obj": TTLCCObj,
+    "cgp": ClairvoyantGreedy,
+    "spanstore": SPANStore,
+    "skystore": SkyStorePolicy,
+    "aws_mrb": aws_multi_region,
+    "juicefs": juicefs,
+}
+
+
 def make_policy(name: str, cost: CostModel, **kw) -> Policy:
     name = POLICY_ALIASES.get(name, name)
-    table = {
-        "always_evict": AlwaysEvict,
-        "always_store": AlwaysStore,
-        "t_even": TevenPolicy,
-        "ewma": EWMAPolicy,
-        "ttl_cc": TTLCC,
-        "ttl_cc_obj": TTLCCObj,
-        "cgp": ClairvoyantGreedy,
-        "spanstore": SPANStore,
-        "skystore": SkyStorePolicy,
-    }
-    if name == "aws_mrb":
-        return aws_multi_region(cost)
-    if name == "juicefs":
-        return juicefs(cost)
-    if name not in table:
-        raise KeyError(f"unknown policy {name!r}; have {sorted(table)} + aws_mrb/juicefs")
-    return table[name](cost, **kw)
+    factory = POLICY_REGISTRY.get(name)
+    if factory is None:
+        raise KeyError(
+            f"unknown policy {name!r}; available: "
+            f"{', '.join(sorted(POLICY_REGISTRY))} "
+            f"(aliases: {', '.join(f'{a}->{c}' for a, c in sorted(POLICY_ALIASES.items()))})")
+    return factory(cost, **kw)

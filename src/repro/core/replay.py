@@ -13,10 +13,39 @@ claim: the same :class:`~repro.core.traces.Trace` is pushed through
     :class:`~repro.core.costmodel.CostModel` per request,
 
 and every observable is diffed: per-GET routing decisions (source region +
-hit/miss), final replica holder sets, op/hit/eviction/replication counters
-(exact), and dollar cost components (storage / base storage / network / ops,
-to a relative tolerance).  Zero divergence is the invariant every policy PR
-must preserve; ``tests/golden/replay/*.json`` pins the absolute numbers.
+hit/miss + the policy's store/evict-now placement action), epoch-solver
+replica-set changes (SPANStore), final replica holder sets,
+op/hit/eviction/replication counters (exact), and dollar cost components
+(storage / base storage / network / ops, to a relative tolerance).  Zero
+divergence is the invariant every policy PR must preserve;
+``tests/golden/replay/*.json`` pins the absolute numbers for the full
+workload x policy evaluation matrix -- oracle baselines (CGP, SPANStore)
+included: each plane derives an equivalent
+:class:`~repro.core.oracle.TraceOracle` from the same trace (the simulator
+keyed by raw trace ids, the live plane by its interned ids), and the
+decisions diff is what proves the two derivations agree.
+
+Worked example -- one workload through both planes, by hand::
+
+    from repro.core.costmodel import pick_regions
+    from repro.core.replay import replay_differential
+    from repro.core.workloads import make_workload
+
+    cost = pick_regions(3)                              # 3-region catalog
+    trace = make_workload("zipfian", cost.region_names(), seed=7)
+    r = replay_differential(trace, cost, "cgp")         # sim + live + diff
+    assert r.ok()                                       # zero divergence
+    print(r.summary_line())                             # one-line verdict
+    print(r.sim_costs["total"], r.live_costs["total"])  # identical bills
+
+Under the hood that call (a) runs the event-driven Simulator over the
+trace, (b) rebuilds the same trace against a live VirtualStore over
+in-memory region backends -- real bytes, a CostLedger charging the same
+CostModel, the policy plugged into the live decision surface, and (for
+``requires_oracle`` policies) a TraceOracle precomputed from the trace --
+then (c) diffs every observable listed above.  Both planes drain one
+:class:`~repro.core.engine.EventSpine` schedule, so expirations, scan
+ticks, and epoch boundaries interleave identically by construction.
 
 CLI::
 
@@ -40,8 +69,9 @@ from .costmodel import CostModel, pick_regions
 from .engine import DATA, EPOCH, EXPIRE, TICK, EventSpine
 from .ledger import CostLedger, CostReport
 from .metadata import COMMITTED, MetadataServer
-from .policies import SPANStore, make_policy
-from .simulator import Simulator, build_epoch_summaries, build_oracle
+from .oracle import TraceOracle
+from .policies import make_policy
+from .simulator import Simulator
 from .traces import Trace
 from .virtual_store import VirtualStore
 from .workloads import make_workload
@@ -53,10 +83,16 @@ COST_RTOL = 1e-6
 #: Golden-fixture regression tolerance (same machine class, tighter).
 GOLDEN_RTOL = 1e-9
 
-#: The policy x workload matrix pinned by the golden regression suite.
+#: The full workload x policy evaluation matrix pinned by the golden
+#: regression suite: every policy of the paper's comparison table (§6.2.2)
+#: -- clairvoyant oracles (cgp, spanstore) and replicate-on-write commercial
+#: stand-ins (aws_mrb, juicefs) included -- on every synthetic workload
+#: shape.  5 workloads x 11 policies = 55 fixtures, all zero-divergence.
 GOLDEN_POLICIES = ("always_evict", "always_store", "t_even", "ewma",
-                   "ttl_cc", "ttl_cc_obj", "skystore", "spanstore", "aws_mrb")
-GOLDEN_WORKLOADS = ("zipfian", "hotspot_shift", "write_heavy")
+                   "ttl_cc", "ttl_cc_obj", "skystore", "cgp", "spanstore",
+                   "aws_mrb", "juicefs")
+GOLDEN_WORKLOADS = ("zipfian", "hotspot_shift", "write_heavy", "diurnal",
+                    "scan_backup")
 GOLDEN_SEED = 7
 
 
@@ -140,15 +176,31 @@ class DiffReport:
 # Plane runners
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class PlaneRun:
+    """Everything one plane's replay produced, in diffable form."""
+
+    report: CostReport
+    #: (t, oid, region, src_region, hit, action) per GET -- routing plus the
+    #: policy's store/evict-now placement choice.
+    decisions: List[Tuple]
+    #: {oid: sorted committed-replica regions} at the horizon.
+    holders: Dict
+    #: (epoch_idx, t, {bucket: replica set}) per epoch-solver run
+    #: (empty unless the policy defines ``epoch``, i.e. SPANStore).
+    epoch_sets: List[Tuple[int, float, Dict[str, Tuple[str, ...]]]]
+
+
 def run_sim_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, **policy_kw,
-) -> Tuple[CostReport, List[Tuple], Dict]:
+) -> PlaneRun:
     policy = make_policy(policy_name, cost, **policy_kw)
     sim = Simulator(cost, policy, mode=mode, scan_interval=scan_interval,
                     track_decisions=True)
     report = sim.run(trace)
-    return report, sim.decisions, sim.replica_holders()
+    return PlaneRun(report, sim.decisions, sim.replica_holders(),
+                    sim.epoch_sets)
 
 
 def _make_live_plane(
@@ -156,31 +208,36 @@ def _make_live_plane(
     backends: Optional[Dict], **policy_kw,
 ):
     """Build the policy-driven live stack for one replay: store + ledger +
-    policy (reset, oracle attached) + SPANStore epoch summaries."""
+    policy, with a trace-backed :class:`~repro.core.oracle.TraceOracle`
+    attached through ``VirtualStore(oracle=...)`` whenever the policy is
+    clairvoyant (``requires_oracle`` -- CGP's next-GET lookahead, SPANStore's
+    per-epoch workload summaries)."""
     policy = make_policy(policy_name, cost, **policy_kw)
     mode = getattr(policy, "mode", None) or mode
     horizon = trace.duration
+    policy.reset()
     ledger = CostLedger(cost, policy=policy.name, mode=mode, horizon=horizon)
     meta = MetadataServer(cost, mode=mode, versioning=False, ledger=ledger)
+    # Key the oracle by the metadata server's interned ids -- identical to
+    # the raw trace ids for numeric keys, and correct for traces whose
+    # iter_requests rewrites keys to arbitrary strings.
+    oracle = (TraceOracle.from_trace(trace, epoch_len=policy.epoch,
+                                     interner=meta.interner)
+              if policy.requires_oracle else None)
     if backends is None:
         backends = {r: InMemoryBackend(r) for r in cost.region_names()}
     store = VirtualStore(cost, backends, meta, mode=mode, policy=policy,
-                         ledger=ledger)
+                         ledger=ledger, oracle=oracle)
     for bucket in trace.buckets:
         store.create_bucket(bucket)
-    policy.reset()
-    if policy.requires_oracle:
-        policy.oracle = build_oracle(trace)
-    span_epochs = None
-    if isinstance(policy, SPANStore):
-        span_epochs = build_epoch_summaries(trace, policy.epoch)
-    return store, ledger, policy, span_epochs, horizon
+    return store, ledger, policy, horizon
 
 
 def _dispatch_live(store: VirtualStore, req, t: float,
                    decisions: List[Tuple]) -> None:
     """One data event on the live plane: materialize simulated PUT bodies,
-    dispatch, and record the per-GET routing decision.  The simulator
+    dispatch, and record the per-GET routing decision (source region, hit,
+    and the policy's placement action off the response).  The simulator
     silently skips requests at missing keys; a live error on the same event
     is a divergence to report, not a crash (hand-authored traces can
     violate the generator invariants)."""
@@ -190,22 +247,36 @@ def _dispatch_live(store: VirtualStore, req, t: float,
         resp = store.dispatch(req)
     except ApiError as e:
         decisions.append((t, type(req).__name__, getattr(req, "region", None),
-                          f"error:{e.code}", False))
+                          f"error:{e.code}", False, "error"))
         return
     if isinstance(req, GetRequest):
         decisions.append((t, store._obj_id(req.key), req.region,
-                          resp.source_region, resp.hit))
+                          resp.source_region, resp.hit,
+                          resp.placement_action))
 
 
-def _drive_live_spine(store: VirtualStore, policy, span_epochs, trace: Trace,
-                      scan_interval: float, horizon: float) -> List[Tuple]:
+def _live_epoch(store: VirtualStore, policy, epoch: int, t: float,
+                epoch_sets: List[Tuple]) -> None:
+    """Epoch boundary on the live plane: feed the solver the upcoming
+    epoch's workload off the shared oracle, apply the new replica sets, and
+    record them for the epoch-set diff (``Simulator.run``'s EPOCH branch,
+    mirrored)."""
+    gets, puts = policy.oracle.epoch_summary(epoch)
+    policy.solve_epoch(gets, puts)
+    store.apply_replica_sets(policy.replica_sets, t)
+    epoch_sets.append((epoch, t, dict(policy.replica_sets)))
+
+
+def _drive_live_spine(store: VirtualStore, policy, trace: Trace,
+                      scan_interval: float, horizon: float,
+                      ) -> Tuple[List[Tuple], List[Tuple]]:
     """Drain one :class:`~repro.core.engine.EventSpine` through the live
     plane: expirations pop off the shared index (O(expired) per event)
     instead of a full eviction scan before every request."""
     decisions: List[Tuple] = []
-    epoch_len = policy.epoch if span_epochs is not None else None
+    epoch_sets: List[Tuple] = []
     spine = EventSpine(trace.iter_requests(), store.meta.expiry,
-                       scan_interval=scan_interval, epoch_len=epoch_len,
+                       scan_interval=scan_interval, epoch_len=policy.epoch,
                        horizon=horizon)
     for sev in spine:
         if sev.kind == EXPIRE:
@@ -216,18 +287,17 @@ def _drive_live_spine(store: VirtualStore, policy, span_epochs, trace: Trace,
             store.meta.expire_pending(sev.t)
             policy.periodic(sev.t, store)
         elif sev.kind == EPOCH:
-            gets, puts = span_epochs.get(sev.epoch, ({}, {}))
-            policy.solve_epoch(gets, puts)
-            _apply_spanstore_live(store, policy, sev.t)
-    return decisions
+            _live_epoch(store, policy, sev.epoch, sev.t, epoch_sets)
+    return decisions, epoch_sets
 
 
-def _drive_live_full_scan(store: VirtualStore, policy, span_epochs,
+def _drive_live_full_scan(store: VirtualStore, policy,
                           trace: Trace, scan_interval: float,
-                          horizon: float) -> List[Tuple]:
+                          horizon: float) -> Tuple[List[Tuple], List[Tuple]]:
     """The pre-spine driver, kept as the measurable baseline: a full
     eviction scan (O(objects)) before every replayed event."""
     decisions: List[Tuple] = []
+    epoch_sets: List[Tuple] = []
     next_tick = scan_interval
     epoch_idx = -1
     for req in trace.iter_requests():
@@ -236,24 +306,22 @@ def _drive_live_full_scan(store: VirtualStore, policy, span_epochs,
             store.run_eviction_scan(next_tick, full_scan=True)
             policy.periodic(next_tick, store)
             next_tick += scan_interval
-        if span_epochs is not None:
+        if policy.epoch is not None:
             e = int(t // policy.epoch)
             if e != epoch_idx:
                 epoch_idx = e
-                gets, puts = span_epochs.get(e, ({}, {}))
-                policy.solve_epoch(gets, puts)
-                _apply_spanstore_live(store, policy, t)
+                _live_epoch(store, policy, e, t, epoch_sets)
         store.run_eviction_scan(t, full_scan=True)
         _dispatch_live(store, req, t, decisions)
     store.run_eviction_scan(horizon, full_scan=True)
-    return decisions
+    return decisions, epoch_sets
 
 
 def run_live_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, backends: Optional[Dict] = None,
     full_scan: bool = False, **policy_kw,
-) -> Tuple[CostReport, List[Tuple], Dict]:
+) -> PlaneRun:
     """Drive the live VirtualStore through the trace under virtual time.
 
     The trace drains through the same :class:`~repro.core.engine.EventSpine`
@@ -262,13 +330,13 @@ def run_live_plane(
     inspect physical traffic counters afterwards; ``full_scan=True``
     selects the legacy per-event O(objects) scan driver (benchmark
     baseline -- semantically identical, measurably slower)."""
-    store, ledger, policy, span_epochs, horizon = _make_live_plane(
+    store, ledger, policy, horizon = _make_live_plane(
         trace, cost, policy_name, mode, backends, **policy_kw)
     drive = _drive_live_full_scan if full_scan else _drive_live_spine
-    decisions = drive(store, policy, span_epochs, trace, scan_interval,
-                      horizon)
+    decisions, epoch_sets = drive(store, policy, trace, scan_interval,
+                                  horizon)
     report = ledger.finalize(horizon, store.meta)
-    return report, decisions, _live_holders(store.meta)
+    return PlaneRun(report, decisions, _live_holders(store.meta), epoch_sets)
 
 
 def live_replay_throughput(
@@ -279,11 +347,11 @@ def live_replay_throughput(
     """Time one live-plane replay; returns events/sec plus the expiry-index
     counters CI guards on (``n_full_scans`` must stay 0 on the spine
     path -- any regression to full-table scanning shows up here)."""
-    store, ledger, policy, span_epochs, horizon = _make_live_plane(
+    store, ledger, policy, horizon = _make_live_plane(
         trace, cost, policy_name, mode, None, **policy_kw)
     drive = _drive_live_full_scan if full_scan else _drive_live_spine
     t0 = time.perf_counter()
-    drive(store, policy, span_epochs, trace, scan_interval, horizon)
+    drive(store, policy, trace, scan_interval, horizon)
     dt = time.perf_counter() - t0
     report = ledger.finalize(horizon, store.meta)
     n = len(trace.events)
@@ -298,23 +366,6 @@ def live_replay_throughput(
         "expiry_stale": store.meta.expiry.n_stale,
         "total_cost": report.total,
     }
-
-
-def _apply_spanstore_live(store: VirtualStore, policy: SPANStore,
-                          now: float) -> None:
-    """Epoch boundary on the live plane: drop replicas outside the solver's
-    new sets (keeping >= min copies) -- ``Simulator._apply_spanstore_sets``."""
-    for (bucket, key), om in list(store.meta.objects.items()):
-        rs = policy.replica_sets.get(bucket)
-        vm = om.latest
-        if not rs or vm is None:
-            continue
-        keep = set(rs)
-        for r in list(vm.replicas):
-            if (r not in keep
-                    and vm.replicas[r].status == COMMITTED
-                    and store._committed_count(vm) > store.min_fp_copies):
-                store._evict_replica(bucket, key, r, now, count_eviction=True)
 
 
 def _live_holders(meta: MetadataServer) -> Dict:
@@ -344,10 +395,12 @@ def replay_differential(
     **policy_kw,
 ) -> DiffReport:
     """Replay ``trace`` through both planes and diff every observable."""
-    sim_rep, sim_dec, sim_holders = run_sim_plane(
-        trace, cost, policy_name, mode, scan_interval, **policy_kw)
-    live_rep, live_dec, live_holders = run_live_plane(
-        trace, cost, policy_name, mode, scan_interval, **policy_kw)
+    sim = run_sim_plane(trace, cost, policy_name, mode, scan_interval,
+                        **policy_kw)
+    live = run_live_plane(trace, cost, policy_name, mode, scan_interval,
+                          **policy_kw)
+    sim_rep, sim_dec = sim.report, sim.decisions
+    live_rep, live_dec = live.report, live.decisions
 
     placement: List[dict] = []
     n_checked = min(len(sim_dec), len(live_dec))
@@ -360,19 +413,34 @@ def replay_differential(
     for i in range(n_checked):
         if sim_dec[i] != live_dec[i]:
             if len(placement) < max_mismatch_detail:
-                t, oid, region, src, hit = sim_dec[i]
-                lt, loid, lregion, lsrc, lhit = live_dec[i]
+                t, oid, region, src, hit, action = sim_dec[i]
+                _lt, _loid, _lregion, lsrc, lhit, laction = live_dec[i]
                 placement.append({
                     "at": t, "obj": oid, "region": region,
-                    "sim": {"src": src, "hit": hit},
-                    "live": {"src": lsrc, "hit": lhit},
+                    "sim": {"src": src, "hit": hit, "action": action},
+                    "live": {"src": lsrc, "hit": lhit, "action": laction},
                 })
             else:
                 placement.append({"at": sim_dec[i][0], "why": "elided"})
 
+    # Epoch-solver replica-set changes (SPANStore): both planes must solve
+    # the same sets at the same boundaries.  Mismatches are placement
+    # divergence -- they land in the same list (and the same fixture
+    # counter) as per-GET routing diffs.
+    if sim.epoch_sets != live.epoch_sets:
+        if len(sim.epoch_sets) != len(live.epoch_sets):
+            placement.append({"at": None, "why": "epoch count",
+                              "sim": len(sim.epoch_sets),
+                              "live": len(live.epoch_sets)})
+        for se, le in zip(sim.epoch_sets, live.epoch_sets):
+            if se != le and len(placement) < max_mismatch_detail:
+                placement.append({"at": se[1], "why": "epoch replica sets",
+                                  "epoch": se[0],
+                                  "sim": se[2], "live": le[2]})
+
     holder_mismatches: List[dict] = []
-    for oid in sorted(set(sim_holders) | set(live_holders), key=str):
-        a, b = sim_holders.get(oid), live_holders.get(oid)
+    for oid in sorted(set(sim.holders) | set(live.holders), key=str):
+        a, b = sim.holders.get(oid), live.holders.get(oid)
         if a != b and len(holder_mismatches) < max_mismatch_detail:
             holder_mismatches.append({"obj": oid, "sim": a, "live": b})
 

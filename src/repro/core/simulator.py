@@ -31,8 +31,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
 from .api import (
     ApiError,
     DeleteObjectRequest,
@@ -47,10 +45,18 @@ from .api import (
 from .costmodel import CostModel
 from .engine import DATA, EPOCH, EXPIRE, TICK, EventSpine
 from .expiry import ExpiryIndex
-from .ledger import CostReport  # noqa: F401  (re-export; CostReport moved)
-from .policies import GetContext, Oracle, Policy, SPANStore
+# DEPRECATED re-export: CostReport lives in repro.core.ledger (it is the
+# shared currency of both verification planes).  Import it from there; this
+# alias only keeps pre-ledger callers working and will be removed once
+# nothing imports it from here.
+from .ledger import CostReport  # noqa: F401
+from .oracle import TraceOracle
+from .oracle import build_epoch_summaries  # noqa: F401  (moved; re-export)
+from .policies import GetContext, Oracle, Policy
+# Trace op codes live next to EVENT_DTYPE in repro.core.traces; re-exported
+# here for the many historical importers (workloads, tests, benchmarks).
+from .traces import OP_DELETE, OP_GET, OP_HEAD, OP_LIST, OP_PUT  # noqa: F401
 
-OP_PUT, OP_GET, OP_DELETE, OP_HEAD, OP_LIST = 0, 1, 2, 3, 4
 INF = float("inf")
 
 
@@ -94,9 +100,16 @@ class Simulator:
         self.charge_ops = charge_ops
         self.track_latency = track_latency
         self.track_decisions = track_decisions
-        #: (t, oid, landing region, source region, hit) per GET, for the
-        #: differential replay harness (repro.core.replay).
-        self.decisions: List[Tuple[float, int, str, str, bool]] = []
+        #: (t, oid, landing region, source region, hit, action) per GET, for
+        #: the differential replay harness (repro.core.replay).  ``action``
+        #: is the policy's post-GET placement choice -- "store"/"skip" on a
+        #: miss, "keep"/"evict" on a hit -- so clairvoyant store/evict-now
+        #: decisions (CGP, §3.1.1) are diffed, not just routing.
+        self.decisions: List[Tuple[float, int, str, str, bool, str]] = []
+        #: (epoch_idx, t, {bucket: replica set}) per epoch-solver run
+        #: (SPANStore §6.2.2) -- the per-epoch replica-set changes the
+        #: replay harness diffs against the live plane.
+        self.epoch_sets: List[Tuple[int, float, Dict[str, Tuple[str, ...]]]] = []
         self.min_fp_copies = min_fp_copies
 
         self.objects: Dict[int, ObjectState] = {}
@@ -256,8 +269,6 @@ class Simulator:
         size = obj.size
         # Same §2.3 routing rule the metadata server uses for live GETs.
         src, hit = choose_get_source(self.holders(obj), region, now, self.cost)
-        if self.track_decisions:
-            self.decisions.append((now, oid, region, src, hit))
         gap_key = (oid, region)
         prev = self._last_get.get(gap_key)
         gap = (now - prev) if prev is not None else None
@@ -266,6 +277,7 @@ class Simulator:
         self.report.n_hit += int(hit)
         self.report.n_miss += int(not hit)
 
+        action = "skip"
         if not hit:
             self._charge_transfer(src, region, size)
             if self.policy.cache_on_read(ctx):
@@ -273,16 +285,22 @@ class Simulator:
                 ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
                 if ttl > 0:
                     self._add_replica(oid, obj, region, now, ttl)
+                    action = "store"
         else:
             rep = obj.replicas[region]
             if not rep.pinned:
                 ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
                 if ttl <= 0 and (self.mode != "FP" or len(obj.replicas) > self.min_fp_copies):
                     self._drop_replica(oid, obj, region, now, count_eviction=True)
+                    action = "evict"
                 else:
                     self._add_replica(oid, obj, region, now, ttl)
+                    action = "keep"
             else:
                 rep.last_access = now
+                action = "keep"
+        if self.track_decisions:
+            self.decisions.append((now, oid, region, src, hit, action))
 
         self._last_get[gap_key] = now
         self._open_last.setdefault((bucket, region), {})[oid] = (now, size)
@@ -332,13 +350,16 @@ class Simulator:
         ev = trace.events
         self._horizon = float(ev["t"][-1]) if len(ev) else 0.0
         self.policy.reset()
-        if self.policy.requires_oracle:
-            self.policy.oracle = build_oracle(trace)
-        span_epochs = None
-        epoch_len = None
-        if isinstance(self.policy, SPANStore):
-            span_epochs = build_epoch_summaries(trace, self.policy.epoch)
-            epoch_len = self.policy.epoch
+        # Clairvoyant policies get the same kind of trace-backed oracle the
+        # live plane uses (repro.core.oracle); epoch-solver policies
+        # (SPANStore) additionally get the per-epoch workload summaries,
+        # served through the oracle rather than a side table -- so any
+        # policy that sets ``epoch`` gets an oracle here even if it left
+        # ``requires_oracle`` False.
+        epoch_len = self.policy.epoch
+        if self.policy.requires_oracle or epoch_len is not None:
+            self.policy.oracle = TraceOracle.from_trace(trace,
+                                                        epoch_len=epoch_len)
 
         spine = EventSpine(trace.iter_requests(), self.expiry,
                            scan_interval=self.scan_interval,
@@ -351,9 +372,11 @@ class Simulator:
             elif sev.kind == TICK:
                 self.policy.periodic(sev.t, self)
             elif sev.kind == EPOCH:
-                gets, puts = span_epochs.get(sev.epoch, ({}, {}))
+                gets, puts = self.policy.oracle.epoch_summary(sev.epoch)
                 self.policy.solve_epoch(gets, puts)
                 self._apply_spanstore_sets(sev.t)
+                self.epoch_sets.append(
+                    (sev.epoch, sev.t, dict(self.policy.replica_sets)))
 
         for oid, obj in self.objects.items():
             for rep in obj.replicas.values():
@@ -389,42 +412,13 @@ class Simulator:
 
 
 # ---------------------------------------------------------------------------
-# Oracle construction
+# Oracle construction (moved to repro.core.oracle; wrapper kept for callers)
 # ---------------------------------------------------------------------------
 
 def build_oracle(trace) -> Oracle:
-    ev = trace.events
-    mask = ev["op"] == OP_GET
-    objs = ev["obj"][mask]
-    regs = ev["region"][mask]
-    ts = ev["t"][mask]
-    table: Dict[Tuple[int, str], np.ndarray] = {}
-    order = np.lexsort((ts, regs, objs))
-    objs, regs, ts = objs[order], regs[order], ts[order]
-    if len(objs):
-        bounds = np.nonzero(np.diff(objs) | np.diff(regs))[0] + 1
-        starts = np.concatenate([[0], bounds])
-        ends = np.concatenate([bounds, [len(objs)]])
-        for s, e in zip(starts, ends):
-            table[(int(objs[s]), trace.regions[int(regs[s])])] = ts[s:e]
-    return Oracle(table)
-
-
-def build_epoch_summaries(trace, epoch: float):
-    """{epoch_idx: ({bucket: {region: get_bytes}}, {bucket: {region: put_bytes}})}
-    for the SPANStore oracle solver -- the *upcoming* epoch's workload."""
-    ev = trace.events
-    out: Dict[int, Tuple[dict, dict]] = {}
-    eidx = (ev["t"] // epoch).astype(np.int64)
-    for i in range(len(ev)):
-        e = int(eidx[i])
-        gets, puts = out.setdefault(e, ({}, {}))
-        bucket = trace.buckets[int(ev["bucket"][i])]
-        region = trace.regions[int(ev["region"][i])]
-        d = gets if int(ev["op"][i]) == OP_GET else puts
-        d.setdefault(bucket, {}).setdefault(region, 0.0)
-        d[bucket][region] += float(ev["size"][i])
-    return out
+    """DEPRECATED: use :meth:`repro.core.oracle.TraceOracle.from_trace`,
+    which also carries per-GET sizes and optional epoch summaries."""
+    return TraceOracle.from_trace(trace)
 
 
 def run_policy(trace, cost: CostModel, policy_name: str, mode: str = "FB",

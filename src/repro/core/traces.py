@@ -42,7 +42,11 @@ import numpy as np
 from .api import (
     DeleteObjectRequest, GetRequest, HeadRequest, ListRequest, PutRequest,
 )
-from .simulator import OP_DELETE, OP_GET, OP_HEAD, OP_LIST, OP_PUT
+
+#: Trace event op codes (the ``op`` column of :data:`EVENT_DTYPE`).  These
+#: live here -- next to the dtype they index -- and are re-exported by
+#: :mod:`repro.core.simulator` for its historical importers.
+OP_PUT, OP_GET, OP_DELETE, OP_HEAD, OP_LIST = 0, 1, 2, 3, 4
 
 DAY = 24 * 3600.0
 MONTH = 30 * DAY

@@ -121,6 +121,7 @@ class VirtualStore:
         policy: Optional[Policy] = None,
         ledger: Optional[CostLedger] = None,
         min_fp_copies: int = 1,
+        oracle=None,
     ) -> None:
         missing = set(cost.region_names()) - set(backends)
         if missing:
@@ -143,6 +144,37 @@ class VirtualStore:
         self.meta = meta or MetadataServer(cost, mode=self.mode, ledger=ledger,
                                            versioning=policy is None,
                                            min_fp_copies=min_fp_copies)
+        #: Future knowledge for clairvoyant policies (§3.1.1): a
+        #: :class:`~repro.core.oracle.TraceOracle` (or anything implementing
+        #: :class:`~repro.core.policies.Oracle`).  Shared with the metadata
+        #: server so both halves of the live plane consult one instance.
+        self.oracle = oracle if oracle is not None else getattr(
+            self.meta, "oracle", None)
+        if self.oracle is not None:
+            if self.meta.oracle is None:
+                self.meta.oracle = self.oracle
+            if policy is not None and policy.oracle is None:
+                policy.oracle = self.oracle
+        if policy is not None and policy.requires_oracle and policy.oracle is None:
+            raise ValueError(
+                f"policy {policy.name!r} is clairvoyant (requires_oracle=True) "
+                "but no oracle is attached: pass VirtualStore(..., "
+                "oracle=TraceOracle.from_trace(trace, epoch_len=policy.epoch)) "
+                "(see repro.core.oracle) or assign policy.oracle before "
+                "constructing the store")
+        if (policy is not None and policy.epoch is not None
+                and getattr(policy.oracle, "epoch_len", None) != policy.epoch):
+            # An epoch solver without matching epoch summaries would either
+            # crash at the first boundary (no oracle at all) or silently
+            # place from a zero workload -- refuse at construction time,
+            # whatever the policy's requires_oracle flag says.
+            raise ValueError(
+                f"policy {policy.name!r} re-solves every {policy.epoch:g}s "
+                "but its oracle "
+                f"{'is missing' if policy.oracle is None else 'was built with epoch_len=' + repr(getattr(policy.oracle, 'epoch_len', None))}"
+                ": construct it as TraceOracle.from_trace(trace, "
+                "epoch_len=policy.epoch) so epoch_summary() serves the "
+                "solver real workloads")
         if policy is not None:
             # The hit-path guards here and the scan-time guards in the
             # metadata server must see one consistent configuration.
@@ -322,8 +354,9 @@ class VirtualStore:
                 if not vm.replicas:
                     raise
         if self.policy is not None:
-            self._policy_get_bookkeeping(op, vm, src, hit, full, now)
+            action = self._policy_get_bookkeeping(op, vm, src, hit, full, now)
         else:
+            action = "keep" if hit else "store"   # built-in replicate-on-read
             if self.ledger is not None:
                 self.ledger.count_get(hit)
                 self.ledger.charge_op(op.region, "GET")
@@ -347,7 +380,7 @@ class VirtualStore:
             body=body, etag=vm.etag, size=vm.size,
             last_modified=vm.last_modified, version=vm.version,
             content_range=(rng[0], rng[1], vm.size) if rng is not None else None,
-            source_region=src, hit=hit,
+            source_region=src, hit=hit, placement_action=action,
         )
 
     # -- policy-driven placement (the Simulator's decision surface, live) -----
@@ -371,9 +404,12 @@ class VirtualStore:
             self.backends[region].delete(bucket, self._pkey(key, version))
 
     def _policy_get_bookkeeping(self, op: GetRequest, vm, src: str, hit: bool,
-                                full: Optional[bytes], now: float) -> None:
+                                full: Optional[bytes], now: float) -> str:
         """Mirror of ``Simulator._handle_get``: observe, then replicate-on-
-        read / TTL-re-arm / evict exactly as the policy dictates."""
+        read / TTL-re-arm / evict exactly as the policy dictates.  Returns
+        the placement action taken ("store"/"skip" on a miss, "keep"/"evict"
+        on a hit) -- the same label the simulator records per GET, so the
+        replay harness diffs clairvoyant store/evict-now choices too."""
         oid = self._obj_id(op.key)
         if self.ledger is not None:
             self.ledger.count_get(hit)
@@ -385,6 +421,7 @@ class VirtualStore:
                          hit, gap)
         self.policy.observe_get(ctx)
         holders = self.meta.holders(op.bucket, op.key)
+        action = "skip"
         if not hit:
             self.transfers.add(self.cost, src, op.region, vm.size)
             if self.ledger is not None:
@@ -401,6 +438,7 @@ class VirtualStore:
                         op.bucket, self._pkey(op.key, vm.version), full)
                     self.meta.commit_replica(op.bucket, op.key, op.region,
                                              vm.size, h.etag, now, ttl=ttl)
+                    action = "store"
         else:
             rm = vm.replicas[op.region]
             if not rm.pinned:
@@ -409,14 +447,18 @@ class VirtualStore:
                                  or self._committed_count(vm) > self.min_fp_copies):
                     self._evict_replica(op.bucket, op.key, op.region, now,
                                         count_eviction=True)
+                    action = "evict"
                 else:
                     self.meta.touch_replica(op.bucket, op.key, op.region, now,
                                             ttl=ttl)
+                    action = "keep"
             else:
                 rm.last_access = now
+                action = "keep"
         self._last_get[gap_key] = now
         self._open_last.setdefault((op.bucket, op.region), {})[oid] = (
             now, float(vm.size))
+        return action
 
     def last_access_snapshot(self):
         """Same shape as ``Simulator.last_access_snapshot`` -- consumed by
@@ -430,6 +472,29 @@ class VirtualStore:
         self.run_eviction_scan(now)
         if self.policy is not None:
             self.policy.periodic(now, self)
+
+    def apply_replica_sets(self, replica_sets: Dict[str, Tuple[str, ...]],
+                           now: float) -> int:
+        """Epoch boundary of an epoch-solver policy (SPANStore, §6.2.2):
+        drop committed replicas outside the solver's new per-bucket sets,
+        keeping at least ``min_fp_copies`` copies -- the live-plane mirror
+        of ``Simulator._apply_spanstore_sets``.  Returns the number of
+        replicas evicted."""
+        dropped = 0
+        for (bucket, key), om in list(self.meta.objects.items()):
+            rs = replica_sets.get(bucket)
+            vm = om.latest
+            if not rs or vm is None:
+                continue
+            keep = set(rs)
+            for r in list(vm.replicas):
+                if (r not in keep
+                        and vm.replicas[r].status == COMMITTED
+                        and self._committed_count(vm) > self.min_fp_copies):
+                    self._evict_replica(bucket, key, r, now,
+                                        count_eviction=True)
+                    dropped += 1
+        return dropped
 
     def _handle_head(self, op: HeadRequest) -> HeadResponse:
         om = self.meta.head_object(op.bucket, op.key)

@@ -310,25 +310,28 @@ class _RenamedKeyTrace(Trace):
             yield req
 
 
-@pytest.mark.parametrize("policy", ["ttl_cc_obj", "ewma"])
+@pytest.mark.parametrize("policy", ["ttl_cc_obj", "ewma", "cgp"])
 def test_string_keys_replay_identically_to_numeric(policy):
     """Per-object policies (state keyed by the interned object id) must
     take the same decisions whether keys are numeric trace ids or strings:
-    same (region, src, hit) per GET, same bill."""
+    same (region, src, hit, action) per GET, same bill.  ``cgp`` covers the
+    clairvoyant path: the TraceOracle must be keyed by the same interned
+    ids the live plane queries with, or every lookahead silently misses."""
     cost = pick_regions(3)
     tr = make_workload("zipfian", cost.region_names(), seed=11,
                        n_objects=40, n_requests=400)
     renamed = _RenamedKeyTrace(tr.name, tr.events, tr.regions, tr.buckets)
-    rep_n, dec_n, hold_n = run_live_plane(tr, cost, policy)
-    rep_s, dec_s, hold_s = run_live_plane(renamed, cost, policy)
+    run_n = run_live_plane(tr, cost, policy)
+    run_s = run_live_plane(renamed, cost, policy)
+    dec_n, dec_s = run_n.decisions, run_s.decisions
     assert len(dec_n) == len(dec_s) > 0
     for a, b in zip(dec_n, dec_s):
-        # (t, oid, region, src, hit): oids differ by construction
-        assert (a[0], a[2], a[3], a[4]) == (b[0], b[2], b[3], b[4])
-    assert rep_n.components() == rep_s.components()
-    assert rep_n.counters() == rep_s.counters()
-    assert len(hold_n) == len(hold_s)
-    assert sorted(hold_n.values()) == sorted(hold_s.values())
+        # (t, oid, region, src, hit, action): oids differ by construction
+        assert (a[0], *a[2:]) == (b[0], *b[2:])
+    assert run_n.report.components() == run_s.report.components()
+    assert run_n.report.counters() == run_s.report.counters()
+    assert len(run_n.holders) == len(run_s.holders)
+    assert sorted(run_n.holders.values()) == sorted(run_s.holders.values())
 
 
 def test_string_keys_expire_through_the_shared_index():

@@ -1,0 +1,235 @@
+"""The trace-backed oracle (repro.core.oracle) and its live-plane plumbing.
+
+The oracle is what lets the clairvoyant baselines of the paper's
+evaluation table (CGP §3.1.1, SPANStore §6.2.2) run on the *live* plane:
+``VirtualStore(policy=..., oracle=TraceOracle.from_trace(trace))``.  These
+tests pin down
+
+* the construction contract: a ``requires_oracle`` policy on the live plane
+  without an oracle fails loudly at construction time, not obscurely at the
+  first GET;
+* the lookahead semantics: ``next_get_after`` / ``gets_in_window`` /
+  ``epoch_summary`` agree with brute-force scans of the trace (property
+  tests over random workloads).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.backends import InMemoryBackend
+from repro.core.costmodel import pick_regions
+from repro.core.metadata import MetadataServer
+from repro.core.oracle import TraceOracle
+from repro.core.policies import make_policy
+from repro.core.traces import OP_GET
+from repro.core.virtual_store import VirtualStore
+from repro.core.workloads import make_workload
+
+INF = float("inf")
+
+
+@pytest.fixture(scope="module")
+def cost():
+    return pick_regions(3)
+
+
+def _workload(cost, seed, name="zipfian"):
+    return make_workload(name, cost.region_names(), seed=seed,
+                         n_objects=40, n_requests=400)
+
+
+# ---------------------------------------------------------------------------
+# Construction contract
+# ---------------------------------------------------------------------------
+
+def _fresh_store_parts(cost, policy_name):
+    backends = {r: InMemoryBackend(r) for r in cost.region_names()}
+    policy = make_policy(policy_name, cost)
+    mode = getattr(policy, "mode", None) or "FB"
+    meta = MetadataServer(cost, mode=mode, versioning=False)
+    return backends, policy, mode, meta
+
+
+@pytest.mark.parametrize("policy_name", ["cgp", "spanstore"])
+def test_requires_oracle_policy_without_oracle_raises(cost, policy_name):
+    backends, policy, mode, meta = _fresh_store_parts(cost, policy_name)
+    with pytest.raises(ValueError, match="oracle"):
+        VirtualStore(cost, backends, meta, mode=mode, policy=policy)
+
+
+@pytest.mark.parametrize("policy_name", ["cgp", "spanstore"])
+def test_requires_oracle_policy_with_oracle_constructs(cost, policy_name):
+    backends, policy, mode, meta = _fresh_store_parts(cost, policy_name)
+    oracle = TraceOracle.from_trace(_workload(cost, 3),
+                                    epoch_len=policy.epoch)
+    store = VirtualStore(cost, backends, meta, mode=mode, policy=policy,
+                         oracle=oracle)
+    assert policy.oracle is oracle
+    # the metadata server shares the same instance (one oracle per replay)
+    assert meta.oracle is oracle
+    assert store.oracle is oracle
+
+
+def test_oracle_flows_from_metadata_server_when_store_has_none(cost):
+    """A MetadataServer configured with an oracle serves it to the store."""
+    backends, policy, mode, _ = _fresh_store_parts(cost, "cgp")
+    oracle = TraceOracle.from_trace(_workload(cost, 4))
+    meta = MetadataServer(cost, mode=mode, versioning=False, oracle=oracle)
+    store = VirtualStore(cost, backends, meta, mode=mode, policy=policy)
+    assert store.oracle is oracle and policy.oracle is oracle
+
+
+def test_epoch_solver_with_epochless_oracle_raises(cost):
+    """SPANStore fed an oracle built without epoch_len would silently solve
+    from empty workloads -- the store must refuse at construction time."""
+    backends, policy, mode, meta = _fresh_store_parts(cost, "spanstore")
+    oracle = TraceOracle.from_trace(_workload(cost, 6))   # no epoch_len
+    with pytest.raises(ValueError, match="epoch_len"):
+        VirtualStore(cost, backends, meta, mode=mode, policy=policy,
+                     oracle=oracle)
+
+
+def test_epoch_policy_without_requires_oracle_still_gets_guarded(cost):
+    """A custom epoch-solver policy that forgot requires_oracle=True must
+    not crash mid-replay: the simulator auto-builds it an epoch oracle, and
+    the live store refuses construction without one."""
+    from repro.core.policies import SPANStore
+    from repro.core.simulator import Simulator
+
+    class ForgetfulSolver(SPANStore):
+        name = "forgetful"
+        requires_oracle = False
+
+    trace = _workload(cost, 9)
+    sim = Simulator(cost, ForgetfulSolver(cost), mode="FP")
+    sim.run(trace)                       # epoch => oracle auto-attached
+    assert sim.policy.oracle is not None
+    assert sim.policy.oracle.epoch_len == sim.policy.epoch
+
+    backends = {r: InMemoryBackend(r) for r in cost.region_names()}
+    meta = MetadataServer(cost, mode="FP", versioning=False)
+    with pytest.raises(ValueError, match="epoch"):
+        VirtualStore(cost, backends, meta, mode="FP",
+                     policy=ForgetfulSolver(cost))
+
+
+def test_interner_keyed_oracle_matches_default_for_numeric_keys(cost):
+    """With numeric trace keys, the interner-keyed table is identical to
+    the raw-id table (interned id == int(key)) -- exercised through the
+    per-request walk path, forced via an iter_requests override (a
+    canonical Trace takes the vectorized shortcut)."""
+    from repro.core.expiry import KeyInterner
+    from repro.core.traces import Trace
+
+    class _Walked(Trace):
+        def iter_requests(self):   # same requests; defeats the fast path
+            yield from super().iter_requests()
+
+    trace = _workload(cost, 8)
+    walked = _Walked(trace.name, trace.events, trace.regions, trace.buckets)
+    plain = TraceOracle.from_trace(trace)
+    keyed = TraceOracle.from_trace(walked, interner=KeyInterner())
+    # and the canonical-trace shortcut must serve the same table too
+    fast = TraceOracle.from_trace(trace, interner=KeyInterner())
+    for other in (keyed, fast):
+        assert set(plain._na) == set(other._na)
+        for k in plain._na:
+            assert np.array_equal(plain._na[k], other._na[k])
+            assert np.array_equal(plain._sizes[k], other._sizes[k])
+
+
+def test_online_policies_need_no_oracle(cost):
+    backends, policy, mode, meta = _fresh_store_parts(cost, "skystore")
+    store = VirtualStore(cost, backends, meta, mode=mode, policy=policy)
+    assert store.oracle is None and policy.oracle is None
+
+
+# ---------------------------------------------------------------------------
+# Lookahead semantics vs. brute force
+# ---------------------------------------------------------------------------
+
+def _brute_next_get(trace, obj, region, now):
+    ev = trace.events
+    best = INF
+    for i in range(len(ev)):
+        if (int(ev["op"][i]) == OP_GET and int(ev["obj"][i]) == obj
+                and trace.regions[int(ev["region"][i])] == region
+                and float(ev["t"][i]) > now):
+            best = min(best, float(ev["t"][i]))
+    return best
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_next_get_after_agrees_with_brute_force(cost, seed):
+    trace = _workload(cost, seed, name=("zipfian", "write_heavy")[seed % 2])
+    oracle = TraceOracle.from_trace(trace)
+    rng = np.random.default_rng(seed)
+    horizon = trace.duration
+    ev = trace.events
+    gets = ev[ev["op"] == OP_GET]
+    # probe around real GET times (the boundary-sensitive cases: strictly
+    # after `now`, exclusive of a GET landing exactly at `now`), plus
+    # uniform random (obj, region, t) triples
+    probes = []
+    for i in rng.choice(len(gets), size=min(30, len(gets)), replace=False):
+        o = int(gets["obj"][i])
+        r = trace.regions[int(gets["region"][i])]
+        t = float(gets["t"][i])
+        probes += [(o, r, t - 1e-6), (o, r, t), (o, r, t + 1e-6)]
+    for _ in range(30):
+        probes.append((int(rng.integers(0, 45)),
+                       trace.regions[int(rng.integers(0, len(trace.regions)))],
+                       float(rng.random()) * horizon))
+    for obj, region, now in probes:
+        assert oracle.next_get_after(obj, region, now) == \
+            _brute_next_get(trace, obj, region, now), (obj, region, now)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_gets_in_window_agrees_with_brute_force(cost, seed):
+    trace = _workload(cost, seed + 10)
+    oracle = TraceOracle.from_trace(trace)
+    rng = np.random.default_rng(seed)
+    horizon = trace.duration
+    ev = trace.events
+    for _ in range(8):
+        t0 = float(rng.random()) * horizon
+        t1 = t0 + float(rng.random()) * (horizon - t0)
+        region = trace.regions[int(rng.integers(0, len(trace.regions)))]
+        want = {}
+        for i in range(len(ev)):
+            if (int(ev["op"][i]) == OP_GET
+                    and trace.regions[int(ev["region"][i])] == region
+                    and t0 <= float(ev["t"][i]) < t1):
+                o = int(ev["obj"][i])
+                n, b = want.get(o, (0, 0.0))
+                want[o] = (n + 1, b + float(ev["size"][i]))
+        assert oracle.gets_in_window(region, t0, t1) == want
+
+
+def test_epoch_summary_matches_trace_buckets(cost):
+    trace = _workload(cost, 21)
+    epoch = 3600.0
+    oracle = TraceOracle.from_trace(trace, epoch_len=epoch)
+    ev = trace.events
+    # brute-force one non-empty epoch
+    e = int(float(ev["t"][len(ev) // 2]) // epoch)
+    want_gets, want_puts = {}, {}
+    for i in range(len(ev)):
+        if int(float(ev["t"][i]) // epoch) != e:
+            continue
+        d = want_gets if int(ev["op"][i]) == OP_GET else want_puts
+        b = trace.buckets[int(ev["bucket"][i])]
+        r = trace.regions[int(ev["region"][i])]
+        d.setdefault(b, {}).setdefault(r, 0.0)
+        d[b][r] += float(ev["size"][i])
+    gets, puts = oracle.epoch_summary(e)
+    assert gets == want_gets and puts == want_puts
+    # an epoch far past the horizon is empty, not a KeyError
+    assert oracle.epoch_summary(10 ** 9) == ({}, {})
+
+
+def test_oracle_without_epochs_serves_empty_summaries(cost):
+    oracle = TraceOracle.from_trace(_workload(cost, 5))
+    assert oracle.epoch_len is None
+    assert oracle.epoch_summary(0) == ({}, {})

@@ -96,7 +96,7 @@ def _check_reset_on_access(gaps):
     sim = Simulator(cat, make_policy("t_even", cat), mode="FB",
                     scan_interval=3600.0, track_decisions=True)
     sim.run(mk_trace(rows))
-    got = [hit for (_t, _o, _r, _s, hit) in sim.decisions]
+    got = [hit for (_t, _o, _r, _s, hit, _a) in sim.decisions]
     want = [False] + _reference_hits(gaps[:-1], TEVEN_S)
     assert got == want, (gaps, got, want)
 
