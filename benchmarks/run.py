@@ -19,10 +19,11 @@ from benchmarks import kernel_bench, paper_tables
 
 #: CI floor for ``replay_events_per_sec`` on the (reduced-size) large tier.
 #: The spine path sustains ~4-8k events/sec on developer machines and CI
-#: runners; the retired-in-waiting ``full_scan_expired`` baseline manages a
-#: few hundred.  Pinning a floor well above the baseline's ceiling means the
-#: baseline can be deleted without losing the regression signal: any change
-#: that silently reintroduces O(objects) per-event work trips this gate.
+#: runners; the retired ``full_scan_expired`` baseline managed a few
+#: hundred.  The floor sits well above that ceiling, so it alone carries
+#: the regression signal: any change that reintroduces O(objects)
+#: per-event work trips this gate (which is why the baseline could be
+#: deleted).
 SMOKE_REPLAY_EVENTS_PER_SEC_FLOOR = 1500
 
 
@@ -30,18 +31,14 @@ def _emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
-def replay_throughput(n_events_baseline: int = 3000, tier: str = "large",
-                      **tier_overrides) -> dict:
+def replay_throughput(tier: str = "large", **tier_overrides) -> dict:
     """Replay-throughput benchmark on the large workload tier (>= 100k
     events / >= 10k objects by default): events/sec of both planes on the
-    event spine, plus the pre-spine full-scan live driver on a truncated
-    prefix (it is O(objects) per event -- running it over the whole large
-    trace would take tens of minutes, which is the point)."""
+    event spine."""
     import time as _time
 
     from repro.core.costmodel import pick_regions
     from repro.core.replay import live_replay_throughput, run_sim_plane
-    from repro.core.traces import Trace
     from repro.core.workloads import make_workload
 
     cat = pick_regions(3)
@@ -56,19 +53,7 @@ def replay_throughput(n_events_baseline: int = 3000, tier: str = "large",
 
     live = live_replay_throughput(tr, cat, "skystore")
     out["live_events_per_sec"] = live["events_per_sec"]
-    out["n_full_scans"] = live["n_full_scans"]
     out["expiry_pops"] = live["expiry_pops"]
-
-    if n_events_baseline:
-        prefix = Trace(tr.name + "/prefix",
-                       tr.events[:n_events_baseline].copy(),
-                       tr.regions, tr.buckets)
-        base = live_replay_throughput(prefix, cat, "skystore",
-                                      full_scan=True)
-        out["fullscan_events_per_sec"] = base["events_per_sec"]
-        out["fullscan_prefix_events"] = base["events"]
-        out["live_speedup_vs_fullscan"] = (
-            out["live_events_per_sec"] / base["events_per_sec"])
     return out
 
 
@@ -95,7 +80,7 @@ def smoke() -> int:
 
     from repro.core.costmodel import pick_regions
     from repro.core.replay import replay_differential
-    from repro.core.workloads import make_workload
+    from repro.core.workloads import make_outage_schedule, make_workload
     cat = pick_regions(3)
     tr = make_workload("zipfian", cat.region_names(), seed=7,
                        n_objects=60, n_requests=500)
@@ -107,6 +92,23 @@ def smoke() -> int:
         if not r.ok():
             failures.append(f"replay divergence for {pol}: {r.summary_line()}")
 
+    # Chaos smoke: one outage-bearing differential replay (§6.4) -- both
+    # planes must agree under failover, and some GETs must actually fail
+    # over (availability < 1 for a single-copy policy under an outage).
+    sched = make_outage_schedule("single", cat.region_names(), tr.duration,
+                                 seed=7)
+    t0 = time.perf_counter()
+    r = replay_differential(tr, cat, "always_evict",
+                            workload="zipfian-smoke", outages=sched,
+                            outage="single")
+    _emit("smoke_replay_chaos", (time.perf_counter() - t0) * 1e6,
+          f"fraction_served={r.availability['fraction_served']:.3f}")
+    if not r.ok():
+        failures.append(f"chaos replay divergence: {r.summary_line()}")
+    if r.availability["fraction_served"] >= 1.0:
+        failures.append("chaos smoke: outage produced no 503s for the "
+                        "single-copy policy (failure plane inert?)")
+
     t0 = time.perf_counter()
     kb = kernel_bench.ttl_scan_bench(e_dim=128)
     _emit("smoke_kernel_ttl_scan", (time.perf_counter() - t0) * 1e6,
@@ -117,18 +119,13 @@ def smoke() -> int:
           f"events_per_s={sb['events_per_s']:.0f}")
 
     # Large-tier replay smoke (reduced size: same shape, CI-friendly): the
-    # live plane must drain the event spine, never the O(objects) full scan.
+    # pinned events/sec floor is the sole regression signal against
+    # O(objects) per-event work creeping back into the spine path.
     t0 = time.perf_counter()
-    rt = replay_throughput(n_events_baseline=0, tier="large",
-                           n_objects=2000, n_requests=15_000)
+    rt = replay_throughput(tier="large", n_objects=2000, n_requests=15_000)
     _emit("smoke_replay_throughput", (time.perf_counter() - t0) * 1e6,
           f"replay_events_per_sec={rt['live_events_per_sec']:.0f};"
-          f"sim_events_per_sec={rt['sim_events_per_sec']:.0f};"
-          f"n_full_scans={rt['n_full_scans']}")
-    if rt["n_full_scans"] != 0:
-        failures.append(
-            f"live plane fell back to full-table scanning "
-            f"({rt['n_full_scans']} full scans on the spine path)")
+          f"sim_events_per_sec={rt['sim_events_per_sec']:.0f}")
     if rt["expiry_pops"] <= 0:
         failures.append("live replay popped no expirations off the shared "
                         "index (spine not draining the ExpiryIndex?)")
@@ -216,15 +213,12 @@ def main() -> None:
 
     t0 = time.perf_counter()
     rt = replay_throughput(
-        n_events_baseline=2000 if args.quick else 3000,
         tier="large",
         **(dict(n_objects=2000, n_requests=15_000) if args.quick else {}))
     results["replay_throughput"] = rt
     _emit("replay_throughput_large_tier", (time.perf_counter() - t0) * 1e6,
           f"replay_events_per_sec={rt['live_events_per_sec']:.0f};"
-          f"sim={rt['sim_events_per_sec']:.0f};"
-          f"fullscan_baseline={rt['fullscan_events_per_sec']:.0f};"
-          f"speedup={rt['live_speedup_vs_fullscan']:.1f}x")
+          f"sim={rt['sim_events_per_sec']:.0f}")
 
     # ---------------- human-readable detail ----------------
     def table(title, d):

@@ -54,6 +54,7 @@ ERROR_STATUS: Dict[str, int] = {
     "InvalidArgument": 400,
     "InvalidRequest": 400,
     "BucketNotEmpty": 409,
+    "ServiceUnavailable": 503,
     "InternalError": 500,
 }
 
@@ -366,8 +367,13 @@ class ObjectStoreAPI(Protocol):
 # store and the cost simulator.
 # ---------------------------------------------------------------------------
 
+#: The immutable "everything is up" default for availability-aware helpers.
+NO_OUTAGE: frozenset = frozenset()
+
+
 def choose_get_source(
     committed: Mapping[str, float], region: str, now: float, cost,
+    unavailable: frozenset = NO_OUTAGE,
 ) -> Tuple[str, bool]:
     """Route a GET issued from ``region``: local hit if the region holds a
     live committed replica, else the cheapest committed source (§2.3).
@@ -375,12 +381,40 @@ def choose_get_source(
     ``committed`` maps region -> expiry time (``inf`` for pinned replicas).
     Expired-but-not-yet-evicted replicas are used as a last resort, matching
     the lazy eviction scan of §4.2.
+
+    ``unavailable`` is the §6.4 failure plane: replicas in downed regions
+    cannot serve, so the GET fails over to the cheapest *reachable* source
+    (the base-region fallback falls out: the pinned base is a holder), and
+    raises ``ServiceUnavailable`` (HTTP 503) only when every holding region
+    is down.
     """
     if not committed:
         raise ApiError("NoSuchKey", "no committed replica")
-    alive = {r: e for r, e in committed.items() if e > now} or dict(committed)
+    reachable = {r: e for r, e in committed.items() if r not in unavailable}
+    if not reachable:
+        raise ApiError(
+            "ServiceUnavailable",
+            f"every replica-holding region is down ({sorted(committed)})")
+    alive = {r: e for r, e in reachable.items() if e > now} or reachable
     hit = region in alive
     return (region if hit else cost.cheapest_source(alive, region)), hit
+
+
+def resolve_put_region(
+    region: str, base_region: Optional[str], unavailable: frozenset, cost,
+) -> str:
+    """Effective landing region for a write-local PUT (§2.3 + §6.4): the
+    issuing region unless it is down, then the live base (the data has to
+    end up there anyway), then the cheapest live region from the issuer's
+    perspective.  Raises ``ServiceUnavailable`` on a full blackout."""
+    if region not in unavailable:
+        return region
+    if base_region is not None and base_region not in unavailable:
+        return base_region
+    live = [r for r in cost.region_names() if r not in unavailable]
+    if not live:
+        raise ApiError("ServiceUnavailable", "every region is down")
+    return cost.cheapest_source(live, region)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -388,18 +422,29 @@ class PutPlacement:
     base_region: str      # the FB base after this PUT (first writer wins)
     pinned: bool          # is the write-local replica the pinned base copy?
     sync_to_base: bool    # cross-region overwrite refreshes the base (§4.4)
+    #: §6.4: the base is down right now, so the §4.4 sync is *deferred* --
+    #: queued by the caller and replayed when the base region recovers.
+    sync_deferred: bool = False
 
 
 def resolve_put_placement(
     mode: str, base_region: Optional[str], region: str,
+    unavailable: frozenset = NO_OUTAGE,
 ) -> PutPlacement:
     """Write-local placement (§2.3): the first PUT fixes the FB base region;
     later cross-region PUTs are synchronously replicated to it (§4.4 LWW).
-    In FP mode nothing is pinned and no base sync happens."""
+    In FP mode nothing is pinned and no base sync happens.  ``region`` is
+    the *effective* landing region (see :func:`resolve_put_region`); when
+    the base itself is in ``unavailable`` the sync is deferred, not
+    skipped."""
     base = base_region if base_region is not None else region
     if mode != "FB":
         return PutPlacement(base, False, False)
-    return PutPlacement(base, region == base, region != base)
+    if region == base:
+        return PutPlacement(base, True, False)
+    if base in unavailable:
+        return PutPlacement(base, False, False, sync_deferred=True)
+    return PutPlacement(base, False, True)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """The virtual-time event spine: one ordered stream for both planes.
 
-Trace replay needs four kinds of events interleaved on a single virtual
+Trace replay needs five kinds of events interleaved on a single virtual
 timeline:
 
 * **data events** -- the trace's typed request objects (clocked by ``.at``);
@@ -9,7 +9,11 @@ timeline:
 * **scan ticks** -- the §4.2 periodic maintenance hook
   (``Policy.periodic``, pending-upload rollback), every ``scan_interval``;
 * **epoch boundaries** -- SPANStore's solver re-runs (fired at the first
-  data event of each new epoch, as the solver sees the epoch's workload).
+  data event of each new epoch, as the solver sees the epoch's workload);
+* **outage transitions** -- the §6.4 failure plane: an
+  :class:`OutageSchedule` compiles ``(region, down_t, up_t)`` windows into
+  ``REGION_DOWN``/``REGION_UP`` timer events, so both planes flip a
+  region's availability at the identical point in the stream.
 
 Before this module each plane hand-rolled the interleaving (the simulator
 around its private heap, the replay driver around a full eviction scan
@@ -20,15 +24,22 @@ by construction, and the live plane's per-event work drops to O(expired).
 Ordering contract at a shared timestamp ``t`` (matching the historical
 driver loops exactly):
 
-  1. expiries due at or before a scan tick pop first, then the tick fires;
-  2. all ticks ``<= t`` fire before anything else at ``t``;
-  3. an epoch boundary fires next (before the pre-event drain -- the solver
+  1. outage transitions due at or before any drain boundary fire first --
+     a region's availability flips *before* expiries at the same instant
+     are judged (the sole-reachable-copy guard must see the new state), and
+     before ticks, epoch boundaries, and the data event; at one timestamp
+     ``REGION_DOWN`` precedes ``REGION_UP`` (recovery logic sees the
+     freshest unavailability), ties broken by region name;
+  2. expiries due at or before a scan tick pop next, then the tick fires;
+  3. all ticks ``<= t`` fire before anything else at ``t``;
+  4. an epoch boundary fires next (before the pre-event drain -- the solver
      prunes replica sets *before* lazily expired replicas are collected);
-  4. expiries due ``<= t`` pop;
-  5. the data event dispatches.
+  5. expiries due ``<= t`` pop;
+  6. the data event dispatches.
 
-After the last data event, remaining due expiries pop at the horizon and a
-final ``END`` event closes the stream (storage flush / ledger finalize).
+After the last data event, remaining outage transitions and due expiries
+fire at the horizon and a final ``END`` event closes the stream (storage
+flush / ledger finalize).
 
 Paper anchors: the lazy TTL expiration being sequenced here is §3.2's
 "expiration happens lazily off a heap" machinery; the reason one shared
@@ -41,17 +52,25 @@ workload through both spine consumers and diffing the result.
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, Iterable, Iterator, Optional
+from typing import (
+    Dict, FrozenSet, Hashable, Iterable, Iterator, List, Optional, Sequence,
+    Tuple,
+)
 
 from .expiry import ExpiryIndex
 
-__all__ = ["EventSpine", "SpineEvent", "EXPIRE", "TICK", "EPOCH", "DATA", "END"]
+__all__ = [
+    "EventSpine", "SpineEvent", "OutageSchedule", "OutageWindow",
+    "EXPIRE", "TICK", "EPOCH", "DATA", "END", "REGION_DOWN", "REGION_UP",
+]
 
 EXPIRE = "expire"   # one replica came due: ident identifies it, t = expiry
 TICK = "tick"       # periodic maintenance boundary (Policy.periodic)
 EPOCH = "epoch"     # SPANStore epoch boundary: re-solve replica sets
 DATA = "data"       # a trace request: dispatch it
 END = "end"         # stream closed at the horizon: flush open lifetimes
+REGION_DOWN = "region_down"   # §6.4 failure plane: region goes dark
+REGION_UP = "region_up"       # ... and recovers
 
 
 @dataclasses.dataclass
@@ -61,6 +80,96 @@ class SpineEvent:
     request: object = None          # DATA: the typed api request
     ident: Optional[Hashable] = None  # EXPIRE: the ExpiryIndex ident
     epoch: int = -1                 # EPOCH: the new epoch index
+    region: Optional[str] = None    # REGION_DOWN / REGION_UP: which region
+
+
+@dataclasses.dataclass(frozen=True)
+class OutageWindow:
+    """One region outage: ``region`` is unreachable over [``down_t``,
+    ``up_t``) -- its replicas cannot serve GETs, PUTs cannot land there,
+    and its physical bytes cannot be deleted."""
+
+    region: str
+    down_t: float
+    up_t: float
+
+
+class OutageSchedule:
+    """A set of region-outage windows, compiled into the ``REGION_DOWN`` /
+    ``REGION_UP`` transition stream the :class:`EventSpine` merges in.
+
+    Windows are normalized at construction: clipped to ``t >= 0``, empty
+    windows dropped, and overlapping/abutting windows of the same region
+    merged -- so per region the transitions strictly alternate
+    down/up.  Transitions are ordered ``(t, DOWN-before-UP, region)``; both
+    planes consume the identical sequence, which is what makes outage
+    reactions (failover routing, deferred base sync, the reachable-copy
+    expiry guard) differentially verifiable.
+    """
+
+    def __init__(self, windows: Iterable[OutageWindow]) -> None:
+        per_region: Dict[str, List[Tuple[float, float]]] = {}
+        for w in windows:
+            down = max(0.0, float(w.down_t))
+            up = float(w.up_t)
+            if up <= down:
+                continue
+            per_region.setdefault(w.region, []).append((down, up))
+        merged: List[OutageWindow] = []
+        for region, spans in per_region.items():
+            spans.sort()
+            cur_d, cur_u = spans[0]
+            for d, u in spans[1:]:
+                if d <= cur_u:                  # overlap / abut: merge
+                    cur_u = max(cur_u, u)
+                else:
+                    merged.append(OutageWindow(region, cur_d, cur_u))
+                    cur_d, cur_u = d, u
+            merged.append(OutageWindow(region, cur_d, cur_u))
+        self.windows: Tuple[OutageWindow, ...] = tuple(
+            sorted(merged, key=lambda w: (w.down_t, w.up_t, w.region)))
+
+    def __len__(self) -> int:
+        return len(self.windows)
+
+    def __bool__(self) -> bool:
+        return bool(self.windows)
+
+    def regions(self) -> Tuple[str, ...]:
+        return tuple(sorted({w.region for w in self.windows}))
+
+    def transitions(self) -> List[Tuple[float, str, str]]:
+        """The ordered transition stream: ``(t, kind, region)`` with kind in
+        ``(REGION_DOWN, REGION_UP)``, sorted ``(t, DOWN-first, region)``."""
+        evs: List[Tuple[float, int, str, str]] = []
+        for w in self.windows:
+            evs.append((w.down_t, 0, w.region, REGION_DOWN))
+            evs.append((w.up_t, 1, w.region, REGION_UP))
+        evs.sort()
+        return [(t, kind, region) for (t, _rank, region, kind) in evs]
+
+    def is_down(self, region: str, t: float) -> bool:
+        """Is ``region`` inside an outage window at time ``t``?  (down at
+        ``down_t``, back up at ``up_t`` -- half-open windows.)"""
+        return any(w.region == region and w.down_t <= t < w.up_t
+                   for w in self.windows)
+
+    def unavailable_at(self, t: float) -> FrozenSet[str]:
+        return frozenset(w.region for w in self.windows
+                         if w.down_t <= t < w.up_t)
+
+    def max_concurrent_down(self, regions: Sequence[str]) -> int:
+        """Worst-case number of simultaneously-down regions (schedules used
+        for differential replay should keep this < len(regions): a full
+        blackout 503s PUTs, after which the planes legitimately diverge on
+        the downstream missing-key errors the same way invalid traces do)."""
+        worst = down = 0
+        for _t, kind, region in self.transitions():
+            if region not in regions:
+                continue
+            down += 1 if kind == REGION_DOWN else -1
+            worst = max(worst, down)
+        return worst
 
 
 class EventSpine:
@@ -81,18 +190,31 @@ class EventSpine:
         scan_interval: float,
         epoch_len: Optional[float] = None,
         horizon: float = 0.0,
+        outages: Optional[OutageSchedule] = None,
     ) -> None:
         self.requests = requests
         self.expiry = expiry
         self.scan_interval = scan_interval
         self.epoch_len = epoch_len
         self.horizon = horizon
+        self.outages = outages
+
+    def _drain_outages(self, now: float) -> Iterator[SpineEvent]:
+        # Outage transitions flip availability before coincident expiries
+        # are judged (contract step 1): the sole-reachable-copy guard and
+        # the post-recovery collection both depend on this order.
+        while self._transitions and self._transitions[0][0] <= now:
+            t, kind, region = self._transitions.pop(0)
+            yield SpineEvent(kind, t, region=region)
 
     def _drain(self, now: float) -> Iterator[SpineEvent]:
+        yield from self._drain_outages(now)
         for texp, ident in self.expiry.pop_due(now):
             yield SpineEvent(EXPIRE, texp, ident=ident)
 
     def __iter__(self) -> Iterator[SpineEvent]:
+        self._transitions = (list(self.outages.transitions())
+                             if self.outages is not None else [])
         next_tick = self.scan_interval
         epoch_idx = -1
         for req in self.requests:
@@ -101,6 +223,7 @@ class EventSpine:
                 yield from self._drain(next_tick)
                 yield SpineEvent(TICK, next_tick)
                 next_tick += self.scan_interval
+            yield from self._drain_outages(t)
             if self.epoch_len is not None:
                 e = int(t // self.epoch_len)
                 if e != epoch_idx:

@@ -46,6 +46,15 @@ class CostReport:
     n_miss: int = 0
     n_evictions: int = 0
     n_replications: int = 0
+    #: §6.4 failure plane: GETs that 503'd because every replica-holding
+    #: region was down.  Deliberately NOT part of :meth:`counters` -- the
+    #: pre-outage golden fixtures pin that dict exactly; the replay harness
+    #: diffs this field explicitly and reports it in the availability
+    #: metric instead.
+    n_unavailable: int = 0
+    #: §6.4: §4.4 base syncs that were deferred past an outage and replayed
+    #: at REGION_UP (same fixture-compat note as ``n_unavailable``).
+    n_deferred_syncs: int = 0
     get_latency_ms: List[float] = dataclasses.field(default_factory=list)
     put_latency_ms: List[float] = dataclasses.field(default_factory=list)
 
@@ -92,6 +101,18 @@ class CostReport:
             "n_miss": self.n_miss,
             "n_evictions": self.n_evictions,
             "n_replications": self.n_replications,
+        }
+
+    def availability(self) -> Dict[str, float]:
+        """The §6.4 availability metric: fraction of GET attempts served
+        (vs. 503'd for want of any reachable replica).  ``n_get`` counts
+        only *served* GETs, so attempts = served + unavailable."""
+        attempts = self.n_get + self.n_unavailable
+        return {
+            "gets_served": self.n_get,
+            "gets_unavailable": self.n_unavailable,
+            "deferred_syncs": self.n_deferred_syncs,
+            "fraction_served": self.n_get / attempts if attempts else 1.0,
         }
 
     def summary(self) -> Dict[str, float]:
@@ -205,6 +226,15 @@ class CostLedger:
 
     def count_replication(self) -> None:
         self.report.n_replications += 1
+
+    def count_unavailable(self) -> None:
+        """A GET found no reachable replica (503, §6.4)."""
+        self.report.n_unavailable += 1
+
+    def count_deferred_sync(self) -> None:
+        """A §4.4 base sync was queued past an outage (replayed at
+        recovery; the transfer/op charges land when it actually runs)."""
+        self.report.n_deferred_syncs += 1
 
     # -- end of replay -------------------------------------------------------
     def finalize(self, horizon: float, meta=None) -> CostReport:

@@ -198,9 +198,11 @@ class MetadataServer:
         #: sort key and the id policies key their state by (numeric trace
         #: keys keep their integer value, matching the Simulator).
         self.interner = KeyInterner()
-        #: Calls to the legacy O(objects) sweep (`full_scan_expired`) --
-        #: stays 0 on the fast path; CI asserts it (benchmarks/run.py smoke).
-        self.n_full_scans = 0
+        #: §6.4 failure plane: regions currently inside an outage window.
+        #: The VirtualStore shares this exact set object (region_down /
+        #: region_up mutate it), so GET routing, the eviction guards, and
+        #: the data plane's gating all see one consistent view.
+        self.unavailable: set = set()
         self.objects: Dict[Tuple[str, str], ObjectMeta] = {}
         self.buckets: Dict[str, dict] = {}
         #: per-bucket sorted key index -- keeps paginated listings O(page)
@@ -351,7 +353,8 @@ class MetadataServer:
         committed = self._holders_of(vm)
         if not committed:
             raise ApiError("NoSuchKey", f"{bucket}/{key} has no committed replica")
-        src, hit = choose_get_source(committed, region, now, self.cost)
+        src, hit = choose_get_source(committed, region, now, self.cost,
+                                     self.unavailable)
         return vm, src, hit
 
     @staticmethod
@@ -495,8 +498,24 @@ class MetadataServer:
             # setters seeing it; restore the schedule rather than dropping.
             self._bind_replica(bucket, key, version, m)
             return None
+        if region in self.unavailable:
+            # §6.4: the region is dark -- the physical delete cannot run.
+            # Step the expiry (property setter re-arms) so a pop after
+            # recovery collects it; same rule as Simulator._expire_one.
+            m.last_access += max(m.ttl, 3600.0)
+            return None
         alive = sum(1 for x in vm.replicas.values() if x.status == COMMITTED)
         if alive > self.min_fp_copies:
+            if self.unavailable and not any(
+                    r for r, x in vm.replicas.items()
+                    if (r != region and x.status == COMMITTED
+                        and r not in self.unavailable)):
+                # §6.4 reachable-copy guard: every committed sibling sits in
+                # a downed region; dropping this one would 503 the object
+                # for the rest of the outage.  Step-and-re-arm instead
+                # (identical to Simulator._expire_one's guard).
+                m.last_access += max(m.ttl, 3600.0)
+                return None
             del vm.replicas[region]
             m.unbind_index()
             if self.ledger is not None:
@@ -527,40 +546,6 @@ class MetadataServer:
                     and self.expiry.armed_expire(
                         (bucket, key, vm.version, rm.region)) is None):
                 self._bind_replica(bucket, key, vm.version, rm)
-
-    def full_scan_expired(self, now: Optional[float] = None) -> List[Tuple[str, str, str, int]]:
-        """The pre-spine O(objects-x-replicas) eviction sweep, kept verbatim
-        as the measurable baseline for the replay-throughput benchmark
-        (``python -m benchmarks.run``).  Counted in ``n_full_scans`` so CI
-        can assert the O(expired) path never silently falls back to it."""
-        self.n_full_scans += 1
-        now = time.time() if now is None else now
-        out = []
-        for (bucket, key), om in self.objects.items():
-            for vm in om.versions:
-                expired = sorted(
-                    (m for m in vm.replicas.values()
-                     if m.status == COMMITTED and not m.pinned
-                     and m.expire <= now),
-                    key=lambda m: (m.expire, m.region),
-                )
-                for m in expired:
-                    alive = sum(1 for x in vm.replicas.values()
-                                if x.status == COMMITTED)
-                    if alive > self.min_fp_copies:
-                        del vm.replicas[m.region]
-                        m.unbind_index()
-                        if self.ledger is not None:
-                            self.ledger.on_replica_drop(
-                                bucket, key, m.region, m.expire,
-                                count_eviction=True, version=vm.version)
-                        out.append((bucket, key, m.region, vm.version))
-                    elif self.mode == "FP":
-                        # Sole copy: re-arm in max(ttl, 1h) steps until the
-                        # expiry clears `now` (keep paying storage, §3.2.1).
-                        while m.expire <= now:
-                            m.last_access += max(m.ttl, 3600.0)
-        return out
 
     def delete_object(self, bucket: str, key: str,
                       now: Optional[float] = None) -> List[Tuple[str, int]]:

@@ -108,6 +108,16 @@ class Policy:
     def periodic(self, now: float, sim) -> None:
         """Hook called at every simulator maintenance tick (eviction scan)."""
 
+    def region_available(self, region: str, available: bool, now: float) -> None:
+        """§6.4 failure-plane hook: called by both planes when ``region``
+        goes down (``available=False``) or recovers (``True``) -- *after*
+        the plane updated its own unavailability state and, on recovery,
+        after deferred base syncs replayed, so a policy observing holders
+        sees the post-recovery placement.  Policies that pre-position
+        replicas (or want to re-replicate after an outage) react here; the
+        built-in policies are availability-agnostic -- the mechanics layer
+        already fails GETs over and redirects PUTs for them."""
+
 
 # ---------------------------------------------------------------------------
 # Trivial baselines

@@ -66,7 +66,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .api import ApiError, GetRequest, PutRequest
 from .backends import InMemoryBackend
 from .costmodel import CostModel, pick_regions
-from .engine import DATA, EPOCH, EXPIRE, TICK, EventSpine
+from .engine import (
+    DATA, EPOCH, EXPIRE, REGION_DOWN, REGION_UP, TICK, EventSpine,
+    OutageSchedule,
+)
 from .ledger import CostLedger, CostReport
 from .metadata import COMMITTED, MetadataServer
 from .oracle import TraceOracle
@@ -74,7 +77,7 @@ from .policies import make_policy
 from .simulator import Simulator
 from .traces import Trace
 from .virtual_store import VirtualStore
-from .workloads import make_workload
+from .workloads import make_outage_schedule, make_workload
 
 DAY = 24 * 3600.0
 
@@ -94,6 +97,16 @@ GOLDEN_POLICIES = ("always_evict", "always_store", "t_even", "ewma",
 GOLDEN_WORKLOADS = ("zipfian", "hotspot_shift", "write_heavy", "diurnal",
                     "scan_backup")
 GOLDEN_SEED = 7
+
+#: The §6.4 chaos extension of the golden matrix: every outage profile
+#: (repro.core.workloads.make_outage_schedule) x four representative
+#: policies -- trivial single-copy (worst availability), the paper's
+#: adaptive policy, a clairvoyant oracle, and the epoch solver -- on the
+#: zipfian workload.  3 x 4 = 12 outage-bearing zero-divergence fixtures;
+#: every fixture additionally pins the availability metric.
+GOLDEN_OUTAGE_PROFILES = ("single", "rolling", "flaky")
+GOLDEN_OUTAGE_POLICIES = ("always_evict", "skystore", "cgp", "spanstore")
+GOLDEN_OUTAGE_WORKLOAD = "zipfian"
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +133,12 @@ class DiffReport:
     sim_costs: Dict[str, float]
     live_costs: Dict[str, float]
     sim_counters: Dict[str, int]
+    #: §6.4 chaos runs only: the outage profile name and the availability
+    #: metric ({gets_served, gets_unavailable, deferred_syncs,
+    #: fraction_served}, agreed by both planes).  Empty/None on outage-free
+    #: runs so the pre-chaos fixtures stay byte-identical.
+    outage: str = ""
+    availability: Optional[Dict[str, float]] = None
 
     @property
     def n_placement_divergence(self) -> int:
@@ -144,7 +163,7 @@ class DiffReport:
                 and self.max_rel_cost_delta <= tol)
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "policy": self.policy,
             "workload": self.workload,
             "mode": self.mode,
@@ -160,16 +179,27 @@ class DiffReport:
             "live": self.live_costs,
             "counters": self.sim_counters,
         }
+        if self.outage:
+            # Chaos fixtures carry the outage identity and the §6.4
+            # availability metric; outage-free fixtures keep the pre-chaos
+            # schema byte-for-byte.
+            out["outage"] = self.outage
+            out["availability"] = self.availability
+        return out
 
     def summary_line(self) -> str:
         status = "OK " if self.ok() else "DIVERGED"
-        return (f"{status} {self.workload:14s} {self.policy:13s} "
+        label = (f"{self.workload}@{self.outage}" if self.outage
+                 else self.workload)
+        avail = (f" served={self.availability['fraction_served']:.3f}"
+                 if self.availability is not None else "")
+        return (f"{status} {label:14s} {self.policy:13s} "
                 f"mode={self.mode} gets={self.n_get_checked} "
                 f"placement_diff={self.n_placement_divergence} "
                 f"holder_diff={self.n_holder_divergence} "
                 f"counter_diff={len(self.counter_diffs)} "
                 f"max_rel_cost_delta={self.max_rel_cost_delta:.2e} "
-                f"sim_total=${self.sim_costs['total']:.6f}")
+                f"sim_total=${self.sim_costs['total']:.6f}{avail}")
 
 
 # ---------------------------------------------------------------------------
@@ -193,11 +223,12 @@ class PlaneRun:
 
 def run_sim_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
-    scan_interval: float = DAY, **policy_kw,
+    scan_interval: float = DAY, outages: Optional[OutageSchedule] = None,
+    **policy_kw,
 ) -> PlaneRun:
     policy = make_policy(policy_name, cost, **policy_kw)
     sim = Simulator(cost, policy, mode=mode, scan_interval=scan_interval,
-                    track_decisions=True)
+                    track_decisions=True, outages=outages)
     report = sim.run(trace)
     return PlaneRun(report, sim.decisions, sim.replica_holders(),
                     sim.epoch_sets)
@@ -269,15 +300,18 @@ def _live_epoch(store: VirtualStore, policy, epoch: int, t: float,
 
 def _drive_live_spine(store: VirtualStore, policy, trace: Trace,
                       scan_interval: float, horizon: float,
+                      outages: Optional[OutageSchedule] = None,
                       ) -> Tuple[List[Tuple], List[Tuple]]:
     """Drain one :class:`~repro.core.engine.EventSpine` through the live
     plane: expirations pop off the shared index (O(expired) per event)
-    instead of a full eviction scan before every request."""
+    instead of a full eviction scan before every request, and §6.4 outage
+    transitions flip the store's availability at the identical point in
+    the stream the simulator sees them."""
     decisions: List[Tuple] = []
     epoch_sets: List[Tuple] = []
     spine = EventSpine(trace.iter_requests(), store.meta.expiry,
                        scan_interval=scan_interval, epoch_len=policy.epoch,
-                       horizon=horizon)
+                       horizon=horizon, outages=outages)
     for sev in spine:
         if sev.kind == EXPIRE:
             store.expire_replica(sev.ident, sev.t)
@@ -286,72 +320,49 @@ def _drive_live_spine(store: VirtualStore, policy, trace: Trace,
         elif sev.kind == TICK:
             store.meta.expire_pending(sev.t)
             policy.periodic(sev.t, store)
+        elif sev.kind == REGION_DOWN:
+            store.region_down(sev.region, sev.t)
+        elif sev.kind == REGION_UP:
+            store.region_up(sev.region, sev.t)
         elif sev.kind == EPOCH:
             _live_epoch(store, policy, sev.epoch, sev.t, epoch_sets)
-    return decisions, epoch_sets
-
-
-def _drive_live_full_scan(store: VirtualStore, policy,
-                          trace: Trace, scan_interval: float,
-                          horizon: float) -> Tuple[List[Tuple], List[Tuple]]:
-    """The pre-spine driver, kept as the measurable baseline: a full
-    eviction scan (O(objects)) before every replayed event."""
-    decisions: List[Tuple] = []
-    epoch_sets: List[Tuple] = []
-    next_tick = scan_interval
-    epoch_idx = -1
-    for req in trace.iter_requests():
-        t = float(req.at)
-        while next_tick <= t:
-            store.run_eviction_scan(next_tick, full_scan=True)
-            policy.periodic(next_tick, store)
-            next_tick += scan_interval
-        if policy.epoch is not None:
-            e = int(t // policy.epoch)
-            if e != epoch_idx:
-                epoch_idx = e
-                _live_epoch(store, policy, e, t, epoch_sets)
-        store.run_eviction_scan(t, full_scan=True)
-        _dispatch_live(store, req, t, decisions)
-    store.run_eviction_scan(horizon, full_scan=True)
     return decisions, epoch_sets
 
 
 def run_live_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, backends: Optional[Dict] = None,
-    full_scan: bool = False, **policy_kw,
+    outages: Optional[OutageSchedule] = None, **policy_kw,
 ) -> PlaneRun:
     """Drive the live VirtualStore through the trace under virtual time.
 
     The trace drains through the same :class:`~repro.core.engine.EventSpine`
-    the simulator uses, so both planes pop expirations in the identical
-    (expire, oid, region) order by construction.  Pass ``backends`` to
-    inspect physical traffic counters afterwards; ``full_scan=True``
-    selects the legacy per-event O(objects) scan driver (benchmark
-    baseline -- semantically identical, measurably slower)."""
+    the simulator uses, so both planes pop expirations (and §6.4 outage
+    transitions -- ``outages`` falls back to ``trace.outages``) in the
+    identical order by construction.  Pass ``backends`` to inspect physical
+    traffic counters afterwards."""
     store, ledger, policy, horizon = _make_live_plane(
         trace, cost, policy_name, mode, backends, **policy_kw)
-    drive = _drive_live_full_scan if full_scan else _drive_live_spine
-    decisions, epoch_sets = drive(store, policy, trace, scan_interval,
-                                  horizon)
+    if outages is None:
+        outages = trace.outages
+    decisions, epoch_sets = _drive_live_spine(store, policy, trace,
+                                              scan_interval, horizon, outages)
     report = ledger.finalize(horizon, store.meta)
     return PlaneRun(report, decisions, _live_holders(store.meta), epoch_sets)
 
 
 def live_replay_throughput(
     trace: Trace, cost: CostModel, policy_name: str = "skystore",
-    mode: str = "FB", scan_interval: float = DAY, full_scan: bool = False,
-    **policy_kw,
+    mode: str = "FB", scan_interval: float = DAY, **policy_kw,
 ) -> Dict[str, float]:
     """Time one live-plane replay; returns events/sec plus the expiry-index
-    counters CI guards on (``n_full_scans`` must stay 0 on the spine
-    path -- any regression to full-table scanning shows up here)."""
+    counters the benchmark smoke guards on (the events/sec floor is the
+    regression signal against O(objects) per-event work creeping back)."""
     store, ledger, policy, horizon = _make_live_plane(
         trace, cost, policy_name, mode, None, **policy_kw)
-    drive = _drive_live_full_scan if full_scan else _drive_live_spine
     t0 = time.perf_counter()
-    drive(store, policy, trace, scan_interval, horizon)
+    _drive_live_spine(store, policy, trace, scan_interval, horizon,
+                      trace.outages)
     dt = time.perf_counter() - t0
     report = ledger.finalize(horizon, store.meta)
     n = len(trace.events)
@@ -361,7 +372,6 @@ def live_replay_throughput(
         "events": n,
         "seconds": dt,
         "events_per_sec": n / dt if dt > 0 else float("inf"),
-        "n_full_scans": store.meta.n_full_scans,
         "expiry_pops": store.meta.expiry.n_pops,
         "expiry_stale": store.meta.expiry.n_stale,
         "total_cost": report.total,
@@ -392,13 +402,21 @@ _COMPARED_COUNTERS = ("n_get", "n_put", "n_head", "n_list", "n_hit",
 def replay_differential(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, workload: str = "", max_mismatch_detail: int = 10,
+    outages: Optional[OutageSchedule] = None, outage: str = "",
     **policy_kw,
 ) -> DiffReport:
-    """Replay ``trace`` through both planes and diff every observable."""
+    """Replay ``trace`` through both planes and diff every observable.
+
+    ``outages`` (falling back to ``trace.outages``) runs the §6.4 failure
+    plane: both planes see the identical REGION_DOWN/REGION_UP stream, and
+    the report additionally carries (and both planes must agree on) the
+    availability metric -- fraction of GETs served vs. 503'd."""
+    if outages is None:
+        outages = trace.outages
     sim = run_sim_plane(trace, cost, policy_name, mode, scan_interval,
-                        **policy_kw)
+                        outages=outages, **policy_kw)
     live = run_live_plane(trace, cost, policy_name, mode, scan_interval,
-                          **policy_kw)
+                          outages=outages, **policy_kw)
     sim_rep, sim_dec = sim.report, sim.decisions
     live_rep, live_dec = live.report, live.decisions
 
@@ -449,6 +467,13 @@ def replay_differential(
         for k in _COMPARED_COUNTERS
         if sim_rep.counters()[k] != live_rep.counters()[k]
     }
+    # §6.4 counters live outside CostReport.counters() (the pre-chaos
+    # fixtures pin that dict byte-for-byte) but are part of the
+    # differential contract all the same.
+    for k in ("n_unavailable", "n_deferred_syncs"):
+        a, b = getattr(sim_rep, k), getattr(live_rep, k)
+        if a != b:
+            counter_diffs[k] = (a, b)
 
     return DiffReport(
         policy=sim_rep.policy,
@@ -462,6 +487,9 @@ def replay_differential(
         sim_costs=sim_rep.components(),
         live_costs=live_rep.components(),
         sim_counters=sim_rep.counters(),
+        outage=outage,
+        availability=(sim_rep.availability() if outages is not None
+                      and len(outages) else None),
     )
 
 
@@ -469,8 +497,12 @@ def replay_differential(
 # Golden-cost regression fixtures
 # ---------------------------------------------------------------------------
 
-def golden_path(golden_dir: str, workload: str, policy: str) -> str:
-    return os.path.join(golden_dir, f"{workload}__{policy}.json")
+def golden_path(golden_dir: str, workload: str, policy: str,
+                outage: str = "") -> str:
+    """Fixture path: ``<workload>__<policy>.json``, or
+    ``<workload>@<outage>__<policy>.json`` for the §6.4 chaos matrix."""
+    wl = f"{workload}@{outage}" if outage else workload
+    return os.path.join(golden_dir, f"{wl}__{policy}.json")
 
 
 def run_golden_matrix(
@@ -488,11 +520,33 @@ def run_golden_matrix(
     return out
 
 
+def run_outage_matrix(
+    policies: Sequence[str] = GOLDEN_OUTAGE_POLICIES,
+    profiles: Sequence[str] = GOLDEN_OUTAGE_PROFILES,
+    workload: str = GOLDEN_OUTAGE_WORKLOAD,
+    seed: int = GOLDEN_SEED,
+    n_regions: int = 3,
+) -> List[DiffReport]:
+    """The §6.4 chaos matrix: outage profiles x representative policies on
+    one workload, every pair zero-divergence with the availability metric
+    pinned."""
+    cost = pick_regions(n_regions)
+    trace = make_workload(workload, cost.region_names(), seed=seed)
+    out = []
+    for prof in profiles:
+        sched = make_outage_schedule(prof, cost.region_names(),
+                                     trace.duration, seed=seed)
+        for pol in policies:
+            out.append(replay_differential(trace, cost, pol, workload=workload,
+                                           outages=sched, outage=prof))
+    return out
+
+
 def write_golden(reports: List[DiffReport], golden_dir: str) -> List[str]:
     os.makedirs(golden_dir, exist_ok=True)
     paths = []
     for r in reports:
-        p = golden_path(golden_dir, r.workload, r.policy)
+        p = golden_path(golden_dir, r.workload, r.policy, r.outage)
         with open(p, "w") as f:
             json.dump(r.to_json(), f, indent=1, sort_keys=True)
             f.write("\n")
@@ -506,7 +560,8 @@ def check_golden(reports: List[DiffReport], golden_dir: str,
     human-readable problems (empty = green)."""
     problems = []
     for r in reports:
-        p = golden_path(golden_dir, r.workload, r.policy)
+        label = f"{r.workload}@{r.outage}" if r.outage else r.workload
+        p = golden_path(golden_dir, r.workload, r.policy, r.outage)
         if not os.path.exists(p):
             problems.append(f"missing fixture {p}")
             continue
@@ -517,13 +572,20 @@ def check_golden(reports: List[DiffReport], golden_dir: str,
             for k, v in want[plane].items():
                 if rel_delta(v, got[plane][k]) > rtol:
                     problems.append(
-                        f"{r.workload}/{r.policy}: {plane}.{k} drifted "
+                        f"{label}/{r.policy}: {plane}.{k} drifted "
                         f"{v} -> {got[plane][k]}")
         if got["counters"] != want["counters"]:
-            problems.append(f"{r.workload}/{r.policy}: counters drifted "
+            problems.append(f"{label}/{r.policy}: counters drifted "
                             f"{want['counters']} -> {got['counters']}")
+        if want.get("availability") is not None:
+            a, b = want["availability"], got.get("availability") or {}
+            for k, v in a.items():
+                if k not in b or rel_delta(v, b[k]) > rtol:
+                    problems.append(
+                        f"{label}/{r.policy}: availability.{k} drifted "
+                        f"{v} -> {b.get(k)}")
         if not r.ok():
-            problems.append(f"{r.workload}/{r.policy}: planes diverged: "
+            problems.append(f"{label}/{r.policy}: planes diverged: "
                             f"{r.summary_line()}")
     return problems
 
@@ -545,12 +607,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--golden-dir", default=default_golden_dir())
     ap.add_argument("--policies", nargs="*", default=list(GOLDEN_POLICIES))
     ap.add_argument("--workloads", nargs="*", default=list(GOLDEN_WORKLOADS))
+    ap.add_argument("--outage-profiles", nargs="*",
+                    default=list(GOLDEN_OUTAGE_PROFILES),
+                    help="§6.4 chaos matrix profiles (empty list to skip)")
+    ap.add_argument("--outage-policies", nargs="*",
+                    default=list(GOLDEN_OUTAGE_POLICIES))
+    ap.add_argument("--skip-outages", action="store_true",
+                    help="run only the outage-free matrix")
+    ap.add_argument("--skip-baseline", action="store_true",
+                    help="run only the §6.4 chaos matrix")
     ap.add_argument("--seed", type=int, default=GOLDEN_SEED)
     ap.add_argument("--regions", type=int, default=3, choices=(3, 6, 9))
     args = ap.parse_args(argv)
 
-    reports = run_golden_matrix(args.policies, args.workloads, args.seed,
-                                args.regions)
+    reports = []
+    if not args.skip_baseline:
+        reports += run_golden_matrix(args.policies, args.workloads, args.seed,
+                                     args.regions)
+    if not args.skip_outages and args.outage_profiles:
+        reports += run_outage_matrix(args.outage_policies,
+                                     args.outage_profiles,
+                                     seed=args.seed, n_regions=args.regions)
     for r in reports:
         print(r.summary_line())
     diverged = [r for r in reports if not r.ok()]

@@ -189,15 +189,22 @@ class _Handler(BaseHTTPRequestHandler):
         if body and self.command != "HEAD":
             self.wfile.write(body)
 
-    def _error(self, code: int, s3code: str, msg: str):
+    def _error(self, code: int, s3code: str, msg: str,
+               headers: Optional[dict] = None):
         body = b"" if self.command == "HEAD" else _xml(
             f"<Error><Code>{s3code}</Code><Message>{escape(msg)}</Message></Error>")
-        self._reply(code, body)
+        self._reply(code, body, headers=headers)
 
     def _api_error(self, e: ApiError):
         if e.code == "NotModified":          # 304: no body, but RFC 7232
             etag = getattr(e, "etag", None)  # requires the validator ETag
             self._reply(304, headers={"ETag": f'"{etag}"'} if etag else None)
+        elif e.code == "ServiceUnavailable":
+            # §6.4: every replica-holding region is inside an outage window.
+            # S3 outage/throttle semantics: 503 + Retry-After so SDK retry
+            # loops back off instead of hammering the proxy.
+            self._error(503, e.code, e.message or e.code,
+                        headers={"Retry-After": "1"})
         else:
             self._error(e.http_status, e.code, e.message or e.code)
 

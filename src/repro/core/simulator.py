@@ -41,9 +41,13 @@ from .api import (
     Request,
     choose_get_source,
     resolve_put_placement,
+    resolve_put_region,
 )
 from .costmodel import CostModel
-from .engine import DATA, EPOCH, EXPIRE, TICK, EventSpine
+from .engine import (
+    DATA, EPOCH, EXPIRE, REGION_DOWN, REGION_UP, TICK, EventSpine,
+    OutageSchedule,
+)
 from .expiry import ExpiryIndex
 # DEPRECATED re-export: CostReport lives in repro.core.ledger (it is the
 # shared currency of both verification planes).  Import it from there; this
@@ -90,6 +94,7 @@ class Simulator:
         track_latency: bool = False,
         track_decisions: bool = False,
         min_fp_copies: int = 1,
+        outages: Optional[OutageSchedule] = None,
     ) -> None:
         if mode not in ("FB", "FP"):
             raise ValueError("mode must be FB or FP")
@@ -111,6 +116,17 @@ class Simulator:
         #: replay harness diffs against the live plane.
         self.epoch_sets: List[Tuple[int, float, Dict[str, Tuple[str, ...]]]] = []
         self.min_fp_copies = min_fp_copies
+
+        #: §6.4 failure plane: the outage schedule compiled into the spine
+        #: (``run`` falls back to ``trace.outages`` when None).
+        self.outages = outages
+        #: Regions currently inside an outage window -- consulted by GET
+        #: routing, PUT redirect, replication-target gating, and the
+        #: reachable-copy expiry guard.
+        self.unavailable: set = set()
+        #: §4.4 syncs deferred past a base-region outage: oid -> the
+        #: write-local landing region, replayed at REGION_UP.
+        self._pending_sync: Dict[int, str] = {}
 
         self.objects: Dict[int, ObjectState] = {}
         #: The shared §3.2 lazy expiration heap (same class -- and thus the
@@ -178,14 +194,41 @@ class Simulator:
             # (cannot happen through _add_replica); restore the schedule.
             self.expiry.arm(ident, ident, rep.expire)
             return
+        step = max(rep.ttl, 3600.0)
+        if region in self.unavailable:
+            # §6.4: the region is dark -- the physical delete cannot run.
+            # Keep the replica (and keep paying its storage), stepping the
+            # expiry until a pop lands after recovery.
+            rep.expire = t + step
+            self.expiry.arm(ident, ident, rep.expire)
+            return
         if self.mode == "FP" and len(obj.replicas) <= self.min_fp_copies:
             # Never evict the sole copy (§3.2.1) -- re-arm and keep paying.
             # If the new expiry is still due, the index pops it again within
             # the same drain (the old "re-arm until clear" loop).
-            rep.expire = t + max(rep.ttl, 3600.0)
+            rep.expire = t + step
+            self.expiry.arm(ident, ident, rep.expire)
+            return
+        if self._sole_reachable(obj, region):
+            # §6.4 reachable-copy guard: every sibling is in a downed
+            # region, so dropping this replica would 503 the object for the
+            # rest of the outage even though its data survives.  Refuse --
+            # step the expiry exactly like the FP sole-copy guard.
+            rep.expire = t + step
             self.expiry.arm(ident, ident, rep.expire)
             return
         self._drop_replica(oid, obj, region, t, count_eviction=True)
+
+    def _sole_reachable(self, obj: ObjectState, region: str) -> bool:
+        """§6.4 guard predicate: is ``region``'s replica the object's last
+        *reachable* copy while an outage is active?  Dropping it would 503
+        the object for the rest of the outage (expiry path) or lose the
+        newest version outright (a deferred-sync landing copy is sole and
+        unpinned).  Always False with no outage in progress -- pre-chaos
+        behaviour is untouched."""
+        return bool(self.unavailable) and not any(
+            r for r in obj.replicas
+            if r != region and r not in self.unavailable)
 
     # -- policy-visible state ------------------------------------------------------
     def last_access_snapshot(self):
@@ -210,10 +253,24 @@ class Simulator:
     # -- event handlers ------------------------------------------------------------
     def _handle_put(self, op: PutRequest):
         now, oid = float(op.at), int(op.key)
-        size, region, bucket = float(op.nbytes), op.region, op.bucket
+        size, bucket = float(op.nbytes), op.bucket
+        obj = self.objects.get(oid)
+        try:
+            # §6.4: a PUT at a downed region redirects (live base first,
+            # else cheapest live region); a full blackout 503s the PUT.
+            region = resolve_put_region(
+                op.region,
+                obj.base_region if (obj is not None and self.mode == "FB")
+                else None,
+                self.unavailable, self.cost)
+        except ApiError as e:
+            if self.track_decisions:
+                self.decisions.append((now, "PutRequest", op.region,
+                                       f"error:{e.code}", False, "error"))
+            return
+        self._pending_sync.pop(oid, None)   # an overwrite re-decides the sync
         self.report.n_put += 1
         self._charge_op(region, "PUT")
-        obj = self.objects.get(oid)
         if obj is None:
             obj = ObjectState(size, bucket, None, {})
             self.objects[oid] = obj
@@ -224,7 +281,8 @@ class Simulator:
         obj.size, obj.version = size, obj.version + 1
 
         if self.mode == "FB":
-            placement = resolve_put_placement("FB", obj.base_region, region)
+            placement = resolve_put_placement("FB", obj.base_region, region,
+                                              self.unavailable)
             obj.base_region = placement.base_region   # §2.3: first write wins
             self._add_replica(oid, obj, region, now, INF,
                               pinned=placement.pinned)
@@ -242,11 +300,18 @@ class Simulator:
                     self._drop_replica(oid, obj, region, now)
                 else:
                     self._add_replica(oid, obj, region, now, ttl)
+            elif placement.sync_deferred:
+                # §6.4: the base is dark -- queue the §4.4 sync for replay
+                # at REGION_UP.  The landing replica keeps an infinite TTL
+                # meanwhile: it may be the newest version's only copy.
+                self._pending_sync[oid] = region
+                self.report.n_deferred_syncs += 1
         else:
             self._add_replica(oid, obj, region, now, INF, pinned=False)
 
         for target in self.policy.replicate_on_write(oid, bucket, region, size, now):
-            if target == region or target in obj.replicas:
+            if (target == region or target in obj.replicas
+                    or target in self.unavailable):
                 continue
             self._charge_transfer(region, target, size)
             self._charge_op(target, "PUT")
@@ -264,11 +329,22 @@ class Simulator:
         obj = self.objects.get(oid)
         if obj is None or not obj.replicas:
             return
+        size = obj.size
+        # Same §2.3 routing rule the metadata server uses for live GETs,
+        # restricted to reachable regions (§6.4 failover).
+        try:
+            src, hit = choose_get_source(self.holders(obj), region, now,
+                                         self.cost, self.unavailable)
+        except ApiError as e:       # ServiceUnavailable: every holder is dark
+            self.report.n_unavailable += 1
+            if self.track_decisions:
+                # The identical tuple the live driver records for a failed
+                # dispatch, so 503s are part of the differential contract.
+                self.decisions.append((now, "GetRequest", region,
+                                       f"error:{e.code}", False, "error"))
+            return
         self.report.n_get += 1
         self._charge_op(region, "GET")
-        size = obj.size
-        # Same §2.3 routing rule the metadata server uses for live GETs.
-        src, hit = choose_get_source(self.holders(obj), region, now, self.cost)
         gap_key = (oid, region)
         prev = self._last_get.get(gap_key)
         gap = (now - prev) if prev is not None else None
@@ -279,8 +355,13 @@ class Simulator:
 
         action = "skip"
         if not hit:
+            # Failover egress: on an outage the cheapest *live* source may
+            # be a pricier edge -- the extra network dollars are the §6.4
+            # cost of availability, charged identically by both planes.
             self._charge_transfer(src, region, size)
-            if self.policy.cache_on_read(ctx):
+            # A downed landing region cannot take the replicate-on-read
+            # copy; the policy is not even consulted (both planes agree).
+            if region not in self.unavailable and self.policy.cache_on_read(ctx):
                 self.report.n_replications += 1
                 ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
                 if ttl > 0:
@@ -290,7 +371,10 @@ class Simulator:
             rep = obj.replicas[region]
             if not rep.pinned:
                 ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
-                if ttl <= 0 and (self.mode != "FP" or len(obj.replicas) > self.min_fp_copies):
+                if (ttl <= 0
+                        and (self.mode != "FP"
+                             or len(obj.replicas) > self.min_fp_copies)
+                        and not self._sole_reachable(obj, region)):
                     self._drop_replica(oid, obj, region, now, count_eviction=True)
                     action = "evict"
                 else:
@@ -310,6 +394,7 @@ class Simulator:
     def _handle_delete(self, op: DeleteObjectRequest):
         now, oid = float(op.at), int(op.key)
         obj = self.objects.pop(oid, None)
+        self._pending_sync.pop(oid, None)
         if obj is None:
             return
         # The issuing region pays the request charge (matches the live plane,
@@ -350,6 +435,10 @@ class Simulator:
         ev = trace.events
         self._horizon = float(ev["t"][-1]) if len(ev) else 0.0
         self.policy.reset()
+        self.unavailable.clear()
+        self._pending_sync.clear()
+        outages = (self.outages if self.outages is not None
+                   else getattr(trace, "outages", None))
         # Clairvoyant policies get the same kind of trace-backed oracle the
         # live plane uses (repro.core.oracle); epoch-solver policies
         # (SPANStore) additionally get the per-epoch workload summaries,
@@ -363,7 +452,8 @@ class Simulator:
 
         spine = EventSpine(trace.iter_requests(), self.expiry,
                            scan_interval=self.scan_interval,
-                           epoch_len=epoch_len, horizon=self._horizon)
+                           epoch_len=epoch_len, horizon=self._horizon,
+                           outages=outages)
         for sev in spine:
             if sev.kind == EXPIRE:
                 self._expire_one(sev.t, sev.ident)
@@ -371,6 +461,10 @@ class Simulator:
                 self.dispatch(sev.request)
             elif sev.kind == TICK:
                 self.policy.periodic(sev.t, self)
+            elif sev.kind == REGION_DOWN:
+                self._region_down(sev.t, sev.region)
+            elif sev.kind == REGION_UP:
+                self._region_up(sev.t, sev.region)
             elif sev.kind == EPOCH:
                 gets, puts = self.policy.oracle.epoch_summary(sev.epoch)
                 self.policy.solve_epoch(gets, puts)
@@ -391,6 +485,57 @@ class Simulator:
         ListRequest: "_handle_list",
     }
 
+    # -- §6.4 failure plane -----------------------------------------------------------
+    def _region_down(self, t: float, region: str) -> None:
+        self.unavailable.add(region)
+        self.policy.region_available(region, False, t)
+
+    def _region_up(self, t: float, region: str) -> None:
+        self.unavailable.discard(region)
+        self._drain_pending_syncs(t)
+        self.policy.region_available(region, True, t)
+
+    def _drain_pending_syncs(self, now: float) -> None:
+        """Replay §4.4 base syncs deferred past an outage (every REGION_UP:
+        the recovering region may be the missing base *or* the only live
+        source of a pending object).  Processed in object-id order -- the
+        live plane iterates its pending set by interned id, so both planes
+        replicate in the same sequence."""
+        for oid in sorted(self._pending_sync):
+            landing = self._pending_sync[oid]
+            obj = self.objects.get(oid)
+            if obj is None or not obj.replicas:
+                del self._pending_sync[oid]
+                continue
+            base = obj.base_region
+            if base is None or base in self.unavailable:
+                continue                    # base still dark: keep waiting
+            if base in obj.replicas:
+                del self._pending_sync[oid]  # a newer PUT already landed there
+                continue
+            holders = {r: e for r, e in self.holders(obj).items()
+                       if r not in self.unavailable}
+            if not holders:
+                continue                    # sources dark: retry at next UP
+            src = self.cost.cheapest_source(holders, base)
+            self._charge_transfer(src, base, obj.size)
+            self._charge_op(base, "PUT")
+            self.report.n_replications += 1
+            self._add_replica(oid, obj, base, now, INF, pinned=True)
+            del self._pending_sync[oid]
+            # The landing copy now demotes to a cache replica with a policy
+            # TTL -- the synchronous §4.4 rule, applied at recovery time.
+            rep = obj.replicas.get(landing)
+            if (rep is not None and not rep.pinned
+                    and landing not in self.unavailable):
+                ctx = GetContext(oid, obj.bucket, landing, base, obj.size,
+                                 now, hit=True, gap=None)
+                ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
+                if ttl <= 0:
+                    self._drop_replica(oid, obj, landing, now)
+                else:
+                    self._add_replica(oid, obj, landing, now, ttl)
+
     def replica_holders(self) -> Dict[int, Tuple[str, ...]]:
         """{oid: sorted committed-replica regions} -- the placement state the
         differential replay harness compares against the live metadata."""
@@ -400,15 +545,21 @@ class Simulator:
         }
 
     def _apply_spanstore_sets(self, now: float) -> None:
-        """Epoch boundary: drop replicas outside the new solver sets (FP, >=1)."""
+        """Epoch boundary: drop replicas outside the new solver sets (FP,
+        >=1).  §6.4: replicas in downed regions cannot be deleted (the next
+        boundary after recovery collects them), and the last reachable copy
+        is never dropped."""
         for oid, obj in self.objects.items():
             rs = self.policy.replica_sets.get(obj.bucket)
             if not rs:
                 continue
             keep = set(rs)
             for r in list(obj.replicas):
-                if r not in keep and len(obj.replicas) > self.min_fp_copies:
-                    self._drop_replica(oid, obj, r, now, count_eviction=True)
+                if (r in keep or r in self.unavailable
+                        or len(obj.replicas) <= self.min_fp_copies
+                        or self._sole_reachable(obj, r)):
+                    continue
+                self._drop_replica(oid, obj, r, now, count_eviction=True)
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,7 @@ import numpy as np
 from .api import (
     DeleteObjectRequest, GetRequest, HeadRequest, ListRequest, PutRequest,
 )
+from .engine import OutageSchedule
 
 #: Trace event op codes (the ``op`` column of :data:`EVENT_DTYPE`).  These
 #: live here -- next to the dtype they index -- and are re-exported by
@@ -69,6 +70,17 @@ class Trace:
     events: np.ndarray                   # EVENT_DTYPE, sorted by t
     regions: Tuple[str, ...]
     buckets: Tuple[str, ...]
+    #: Optional §6.4 failure plane: an
+    #: :class:`~repro.core.engine.OutageSchedule` of (region, down, up)
+    #: windows.  Both replay planes compile it into the shared event
+    #: spine's REGION_DOWN/REGION_UP stream, so a trace *carries* its chaos
+    #: scenario the same way it carries its requests.
+    outages: Optional["OutageSchedule"] = None
+
+    def with_outages(self, outages: "OutageSchedule") -> "Trace":
+        """A copy of this trace with the outage schedule attached (events
+        are shared, not copied)."""
+        return dataclasses.replace(self, outages=outages)
 
     @property
     def duration(self) -> float:

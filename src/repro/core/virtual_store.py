@@ -65,6 +65,7 @@ from .api import (
     check_preconditions,
     decode_continuation_token,
     encode_continuation_token,
+    resolve_put_region,
     resolve_range,
 )
 from .backends import Backend, HeadResult
@@ -191,6 +192,13 @@ class VirtualStore:
         if ledger is not None and self.meta.ledger is None:
             self.meta.ledger = ledger
         self.transfers = TransferLog()
+        #: §6.4 failure plane: regions currently down.  This is the *same
+        #: set object* the metadata server consults for GET routing and the
+        #: eviction guards -- region_down/region_up mutate it in place.
+        self.unavailable = self.meta.unavailable
+        #: §4.4 syncs deferred past a base-region outage:
+        #: (bucket, key) -> write-local landing region; drained at region_up.
+        self._pending_sync: Dict[Tuple[str, str], str] = {}
         self._clock = clock or time.time
         self._mpu: Dict[str, _MultipartUpload] = {}
         # policy-mode bookkeeping, mirroring Simulator._last_get/_open_last
@@ -223,6 +231,14 @@ class VirtualStore:
         return ListBucketsResponse(self.meta.list_buckets())
 
     # -- object ops -----------------------------------------------------------
+    def _put_landing_region(self, bucket: str, key: str, region: str) -> str:
+        """§6.4: the effective write-local region -- the issuing region
+        unless it is down, then the live base, then the cheapest live
+        region; 503 on a full blackout (same rule as the simulator)."""
+        om = self.meta.objects.get((bucket, key))
+        base = om.base_region if (om is not None and self.mode == "FB") else None
+        return resolve_put_region(region, base, self.unavailable, self.cost)
+
     def _handle_put(self, op: PutRequest) -> PutResponse:
         """Write-local PUT with the two-phase commit of §4.5."""
         if op.body is None:
@@ -231,38 +247,44 @@ class VirtualStore:
         data = op.body
         if self.policy is not None:
             return self._policy_put(op, data, now)
+        region = self._put_landing_region(op.bucket, op.key, op.region)
         if self.ledger is not None:
             self.ledger.count_put()
-            self.ledger.charge_op(op.region, "PUT")
-        version = self.meta.begin_upload(op.bucket, op.key, op.region,
+            self.ledger.charge_op(region, "PUT")
+        version = self.meta.begin_upload(op.bucket, op.key, region,
                                          len(data), now)
-        h = self.backends[op.region].put(op.bucket,
-                                         self._pkey(op.key, version), data)
-        self.meta.complete_upload(op.bucket, op.key, op.region, version,
+        h = self.backends[region].put(op.bucket,
+                                      self._pkey(op.key, version), data)
+        self.meta.complete_upload(op.bucket, op.key, region, version,
                                   len(data), h.etag, now)
         return PutResponse(version, h.etag)
 
     def _policy_put(self, op: PutRequest, data: bytes, now: float) -> PutResponse:
-        """Mirror of ``Simulator._handle_put``: write-local commit, §4.4
-        sync-to-base on cross-region overwrite (with a policy TTL on the
-        write-local cache copy), then policy-chosen replication targets.
+        """Mirror of ``Simulator._handle_put``: write-local commit (§6.4
+        outage redirect included), §4.4 sync-to-base on cross-region
+        overwrite (with a policy TTL on the write-local cache copy), then
+        policy-chosen replication targets.
 
         Policy mode runs the metadata server in last-writer-wins mode
         (``versioning=False``) so stale versions drop on overwrite exactly as
         in the simulator; their physical blobs are deleted here.
         """
         size = len(data)
+        # Raises ServiceUnavailable (uncharged) on a full blackout -- the
+        # same pre-charge ordering as Simulator._handle_put.
+        region = self._put_landing_region(op.bucket, op.key, op.region)
+        self._pending_sync.pop((op.bucket, op.key), None)  # overwrite re-decides
         if self.ledger is not None:
             self.ledger.count_put()
-            self.ledger.charge_op(op.region, "PUT")
+            self.ledger.charge_op(region, "PUT")
         stale = self._stale_blobs(op.bucket, op.key)
-        version = self.meta.begin_upload(op.bucket, op.key, op.region, size, now)
+        version = self.meta.begin_upload(op.bucket, op.key, region, size, now)
         pkey = self._pkey(op.key, version)
-        h = self.backends[op.region].put(op.bucket, pkey, data)
-        self.meta.complete_upload(op.bucket, op.key, op.region, version,
+        h = self.backends[region].put(op.bucket, pkey, data)
+        self.meta.complete_upload(op.bucket, op.key, region, version,
                                   size, h.etag, now)
         self._policy_put_mechanics(
-            op.bucket, op.key, op.region, size, h.etag, version, stale, now,
+            op.bucket, op.key, region, size, h.etag, version, stale, now,
             write_to=lambda dst: self.backends[dst].put(op.bucket, pkey, data),
         )
         return PutResponse(version, h.etag)
@@ -290,27 +312,36 @@ class VirtualStore:
         vm = om.latest
         base = om.base_region
         if self.mode == "FB" and region != base:
-            # Sync replication keeps the pinned base fresh (§4.4).
-            self.transfers.add(self.cost, region, base, size)
-            if self.ledger is not None:
-                self.ledger.charge_transfer(region, base, size)
-                self.ledger.charge_op(base, "PUT")
-                self.ledger.count_replication()
-            write_to(base)
-            self.meta.commit_replica(bucket, key, base, size, etag,
-                                     now, ttl=float("inf"))
-            # The write-local copy is a cache replica: give it a policy TTL.
-            ctx = GetContext(oid, bucket, region, base, float(size), now,
-                             hit=True, gap=None)
-            ttl = self.policy.ttl_on_access(
-                ctx, self.meta.holders(bucket, key))
-            if ttl <= 0:
-                self._evict_replica(bucket, key, region, now)
+            if base in self.unavailable:
+                # §6.4: the base is dark -- defer the §4.4 sync to
+                # region_up.  The landing replica keeps its infinite TTL
+                # meanwhile (it may be the newest version's only copy).
+                self._pending_sync[(bucket, key)] = region
+                if self.ledger is not None:
+                    self.ledger.count_deferred_sync()
             else:
-                self.meta.touch_replica(bucket, key, region, now, ttl=ttl)
+                # Sync replication keeps the pinned base fresh (§4.4).
+                self.transfers.add(self.cost, region, base, size)
+                if self.ledger is not None:
+                    self.ledger.charge_transfer(region, base, size)
+                    self.ledger.charge_op(base, "PUT")
+                    self.ledger.count_replication()
+                write_to(base)
+                self.meta.commit_replica(bucket, key, base, size, etag,
+                                         now, ttl=float("inf"))
+                # The write-local copy is a cache replica: policy TTL.
+                ctx = GetContext(oid, bucket, region, base, float(size), now,
+                                 hit=True, gap=None)
+                ttl = self.policy.ttl_on_access(
+                    ctx, self.meta.holders(bucket, key))
+                if ttl <= 0:
+                    self._evict_replica(bucket, key, region, now)
+                else:
+                    self.meta.touch_replica(bucket, key, region, now, ttl=ttl)
         for target in self.policy.replicate_on_write(oid, bucket, region,
                                                      float(size), now):
-            if target == region or target in vm.replicas:
+            if (target == region or target in vm.replicas
+                    or target in self.unavailable):
                 continue
             self.transfers.add(self.cost, region, target, size)
             if self.ledger is not None:
@@ -331,8 +362,13 @@ class VirtualStore:
         now = self._now(op)
         body = full = None
         for _attempt in range(len(self.backends) + 1):
-            vm, src, hit = self.meta.locate(op.bucket, op.key, op.region, now,
-                                            op.version)
+            try:
+                vm, src, hit = self.meta.locate(op.bucket, op.key, op.region,
+                                                now, op.version)
+            except ApiError as e:
+                if e.code == "ServiceUnavailable" and self.ledger is not None:
+                    self.ledger.count_unavailable()   # §6.4: 503'd GET
+                raise
             check_preconditions(vm.etag, op.if_match, op.if_none_match)
             rng = resolve_range(op.range_, vm.size)
             try:
@@ -362,7 +398,8 @@ class VirtualStore:
                 self.ledger.charge_op(op.region, "GET")
                 if not hit:   # replicate-on-read: egress + a new local copy
                     self.ledger.charge_transfer(src, op.region, vm.size)
-                    self.ledger.count_replication()
+                    if op.region not in self.unavailable:
+                        self.ledger.count_replication()
             self.meta.record_get(op.bucket, op.key, op.region, vm.size, hit, now)
             if hit:
                 self.meta.touch_replica(op.bucket, op.key, op.region, now)
@@ -370,10 +407,13 @@ class VirtualStore:
                 # replicate-on-read always copies the whole object (a ranged
                 # miss still seeds a full local replica): egress = full size
                 self.transfers.add(self.cost, src, op.region, vm.size)
-                h = self.backends[op.region].put(
-                    op.bucket, self._pkey(op.key, vm.version), full)
-                self.meta.commit_replica(op.bucket, op.key, op.region, vm.size,
-                                         h.etag, now)
+                if op.region not in self.unavailable:
+                    # §6.4: a downed landing region serves the bytes (the
+                    # failover egress above) but cannot take a local copy.
+                    h = self.backends[op.region].put(
+                        op.bucket, self._pkey(op.key, vm.version), full)
+                    self.meta.commit_replica(op.bucket, op.key, op.region,
+                                             vm.size, h.etag, now)
         if body is None:
             body = full if rng is None else full[rng[0]:rng[1] + 1]
         return GetResponse(
@@ -395,6 +435,15 @@ class VirtualStore:
 
     def _committed_count(self, vm) -> int:
         return sum(1 for m in vm.replicas.values() if m.status == COMMITTED)
+
+    def _sole_reachable(self, vm, region: str) -> bool:
+        """§6.4 guard predicate (mirror of ``Simulator._sole_reachable``):
+        is ``region``'s replica the version's last reachable committed copy
+        while an outage is active?  Always False with no outage."""
+        return bool(self.unavailable) and not any(
+            r for r, m in vm.replicas.items()
+            if (r != region and m.status == COMMITTED
+                and r not in self.unavailable))
 
     def _evict_replica(self, bucket: str, key: str, region: str, now: float,
                        count_eviction: bool = False) -> None:
@@ -423,10 +472,15 @@ class VirtualStore:
         holders = self.meta.holders(op.bucket, op.key)
         action = "skip"
         if not hit:
+            # §6.4 failover egress: the cheapest *live* source may be a
+            # pricier edge; both planes charge the same one.
             self.transfers.add(self.cost, src, op.region, vm.size)
             if self.ledger is not None:
                 self.ledger.charge_transfer(src, op.region, vm.size)
-            if self.policy.cache_on_read(ctx):
+            # A downed landing region cannot take the replicate-on-read
+            # copy; the policy is not consulted (Simulator._handle_get
+            # short-circuits identically).
+            if op.region not in self.unavailable and self.policy.cache_on_read(ctx):
                 if self.ledger is not None:
                     self.ledger.count_replication()
                 ttl = self.policy.ttl_on_access(ctx, holders)
@@ -443,8 +497,10 @@ class VirtualStore:
             rm = vm.replicas[op.region]
             if not rm.pinned:
                 ttl = self.policy.ttl_on_access(ctx, holders)
-                if ttl <= 0 and (self.mode != "FP"
-                                 or self._committed_count(vm) > self.min_fp_copies):
+                if (ttl <= 0
+                        and (self.mode != "FP"
+                             or self._committed_count(vm) > self.min_fp_copies)
+                        and not self._sole_reachable(vm, op.region)):
                     self._evict_replica(op.bucket, op.key, op.region, now,
                                         count_eviction=True)
                     action = "evict"
@@ -478,8 +534,10 @@ class VirtualStore:
         """Epoch boundary of an epoch-solver policy (SPANStore, §6.2.2):
         drop committed replicas outside the solver's new per-bucket sets,
         keeping at least ``min_fp_copies`` copies -- the live-plane mirror
-        of ``Simulator._apply_spanstore_sets``.  Returns the number of
-        replicas evicted."""
+        of ``Simulator._apply_spanstore_sets``.  §6.4: replicas in downed
+        regions cannot be deleted (the first boundary after recovery
+        collects them) and the last reachable copy is never dropped.
+        Returns the number of replicas evicted."""
         dropped = 0
         for (bucket, key), om in list(self.meta.objects.items()):
             rs = replica_sets.get(bucket)
@@ -488,13 +546,86 @@ class VirtualStore:
                 continue
             keep = set(rs)
             for r in list(vm.replicas):
-                if (r not in keep
-                        and vm.replicas[r].status == COMMITTED
-                        and self._committed_count(vm) > self.min_fp_copies):
-                    self._evict_replica(bucket, key, r, now,
-                                        count_eviction=True)
-                    dropped += 1
+                if (r in keep or r in self.unavailable
+                        or vm.replicas[r].status != COMMITTED
+                        or self._committed_count(vm) <= self.min_fp_copies
+                        or self._sole_reachable(vm, r)):
+                    continue
+                self._evict_replica(bucket, key, r, now, count_eviction=True)
+                dropped += 1
         return dropped
+
+    # -- §6.4 failure plane ----------------------------------------------------
+    def region_down(self, region: str, now: Optional[float] = None) -> None:
+        """REGION_DOWN handler (event spine / operator): ``region``'s
+        storage is unreachable from here on -- GETs fail over, PUTs
+        redirect, its replicas are shielded from eviction."""
+        now = self._clock() if now is None else now
+        self.unavailable.add(region)
+        if self.policy is not None:
+            self.policy.region_available(region, False, now)
+
+    def region_up(self, region: str, now: Optional[float] = None) -> None:
+        """REGION_UP handler: ``region`` is reachable again.  Deferred §4.4
+        base syncs replay *before* the policy hook fires, so a policy
+        observing holders sees the post-recovery placement."""
+        now = self._clock() if now is None else now
+        self.unavailable.discard(region)
+        self._drain_pending_syncs(now)
+        if self.policy is not None:
+            self.policy.region_available(region, True, now)
+
+    def _drain_pending_syncs(self, now: float) -> None:
+        """Replay deferred §4.4 base syncs (mirror of
+        ``Simulator._drain_pending_syncs``): every recovery is a chance --
+        the recovering region may be the missing base *or* the only live
+        source.  Iterated in interned-object-id order, the same sequence
+        the simulator uses."""
+        for bk in sorted(self._pending_sync, key=lambda bk: self._obj_id(bk[1])):
+            bucket, key = bk
+            landing = self._pending_sync[bk]
+            om = self.meta.objects.get(bk)
+            vm = om.latest if om is not None else None
+            if vm is None or not any(m.status == COMMITTED
+                                     for m in vm.replicas.values()):
+                del self._pending_sync[bk]
+                continue
+            base = om.base_region
+            if base is None or base in self.unavailable:
+                continue                    # base still dark: keep waiting
+            if (base in vm.replicas
+                    and vm.replicas[base].status == COMMITTED):
+                del self._pending_sync[bk]   # a newer PUT already landed there
+                continue
+            holders = {r: e for r, e in self.meta.holders(bucket, key).items()
+                       if r not in self.unavailable}
+            if not holders:
+                continue                    # sources dark: retry at next UP
+            src = self.cost.cheapest_source(holders, base)
+            pkey = self._pkey(key, vm.version)
+            data = self.backends[src].get(bucket, pkey)
+            self.transfers.add(self.cost, src, base, vm.size)
+            if self.ledger is not None:
+                self.ledger.charge_transfer(src, base, vm.size)
+                self.ledger.charge_op(base, "PUT")
+                self.ledger.count_replication()
+            self.backends[base].put(bucket, pkey, data)
+            self.meta.commit_replica(bucket, key, base, vm.size, vm.etag,
+                                     now, ttl=float("inf"))
+            del self._pending_sync[bk]
+            # The landing copy demotes to a cache replica with a policy TTL
+            # -- the synchronous §4.4 rule, applied at recovery time.
+            rm = vm.replicas.get(landing)
+            if (self.policy is not None and rm is not None and not rm.pinned
+                    and landing not in self.unavailable):
+                ctx = GetContext(self._obj_id(key), bucket, landing, base,
+                                 float(vm.size), now, hit=True, gap=None)
+                ttl = self.policy.ttl_on_access(
+                    ctx, self.meta.holders(bucket, key))
+                if ttl <= 0:
+                    self._evict_replica(bucket, key, landing, now)
+                else:
+                    self.meta.touch_replica(bucket, key, landing, now, ttl=ttl)
 
     def _handle_head(self, op: HeadRequest) -> HeadResponse:
         om = self.meta.head_object(op.bucket, op.key)
@@ -800,14 +931,11 @@ class VirtualStore:
         self.dispatch(AbortMultipartRequest(upload_id))
 
     # -- maintenance ---------------------------------------------------------------
-    def run_eviction_scan(self, now: Optional[float] = None,
-                          full_scan: bool = False) -> int:
+    def run_eviction_scan(self, now: Optional[float] = None) -> int:
         """The §4.2 background process: metadata scan + physical DELETEs.
-        O(expired) off the shared expiry index; ``full_scan=True`` forces
-        the legacy O(objects) sweep (benchmark baseline only)."""
+        O(expired) off the shared expiry index."""
         now = self._clock() if now is None else now
-        scan = self.meta.full_scan_expired if full_scan else self.meta.scan_expired
-        victims = scan(now)
+        victims = self.meta.scan_expired(now)
         for bucket, key, region, version in victims:
             self.backends[region].delete(bucket, self._pkey(key, version))
         self.meta.expire_pending(now)

@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .engine import OutageSchedule, OutageWindow
 from .simulator import OP_DELETE, OP_GET, OP_HEAD, OP_LIST, OP_PUT
 from .traces import DAY, EVENT_DTYPE, Trace
 
@@ -331,6 +332,94 @@ WORKLOAD_TIERS: Dict[str, Dict[str, dict]] = {
                             n_buckets=8, duration=14 * DAY),
     },
 }
+
+
+# ---------------------------------------------------------------------------
+# §6.4 failure plane: seeded outage-schedule generation
+# ---------------------------------------------------------------------------
+
+#: Named outage shapes for the chaos golden matrix (see repro.core.replay):
+#:
+#:   single    one region dark for one long window mid-trace -- the classic
+#:             "us-east-1 is having a day" scenario;
+#:   rolling   every region goes dark once, in turn, non-overlapping --
+#:             exercises failover *and* recovery (deferred syncs, lazy
+#:             collection) for each region;
+#:   flaky     one region blinks through many short windows -- stresses the
+#:             down/up transition machinery far more than the steady state.
+#:
+#: All profiles keep at least one region live at every instant: a full
+#: blackout 503s PUTs, after which the planes legitimately report the
+#: downstream missing-key errors differently (the invalid-trace contract).
+OUTAGE_PROFILE_NAMES = ("single", "rolling", "flaky")
+
+
+def make_outage_schedule(
+    profile: str,
+    regions: Sequence[str],
+    duration: float,
+    seed: int = 0,
+) -> OutageSchedule:
+    """Compile a named outage ``profile`` into a seeded, replay-safe
+    :class:`~repro.core.engine.OutageSchedule` over ``regions`` and a trace
+    of ``duration`` seconds.  Deterministic in (profile, regions, duration,
+    seed) -- the golden outage fixtures pin its output."""
+    rng = _rng(f"outage/{profile}", seed)
+    n_r = len(regions)
+    windows = []
+    if profile == "single":
+        r = int(rng.integers(0, n_r))
+        start = (0.35 + 0.1 * rng.random()) * duration
+        windows.append(OutageWindow(regions[r], start,
+                                    start + 0.15 * duration))
+    elif profile == "rolling":
+        # one slot per region inside the middle 70% of the trace, with
+        # gaps between slots so recoveries complete before the next hit
+        slot = 0.7 * duration / max(n_r, 1)
+        order = rng.permutation(n_r)
+        for i, r in enumerate(order):
+            start = 0.15 * duration + i * slot + 0.1 * slot * rng.random()
+            windows.append(OutageWindow(regions[int(r)], start,
+                                        start + 0.55 * slot))
+    elif profile == "flaky":
+        r = int(rng.integers(0, n_r))
+        starts = np.sort(rng.random(6)) * 0.8 * duration + 0.1 * duration
+        for s in starts:
+            windows.append(OutageWindow(regions[r], float(s),
+                                        float(s) + 0.02 * duration))
+    else:
+        raise KeyError(f"unknown outage profile {profile!r}; have "
+                       f"{OUTAGE_PROFILE_NAMES}")
+    sched = OutageSchedule(windows)
+    assert sched.max_concurrent_down(regions) < max(n_r, 1), \
+        "outage profile must keep >= 1 region live"
+    return sched
+
+
+def random_outage_schedule(
+    regions: Sequence[str],
+    duration: float,
+    seed: int = 0,
+    max_windows: int = 4,
+    max_frac: float = 0.3,
+) -> OutageSchedule:
+    """A fuzzing schedule: up to ``max_windows`` random windows (each up to
+    ``max_frac`` of the trace) across random regions, thinned until no
+    instant has every region down (the differential-replay invariant)."""
+    rng = _rng("outage/random", seed)
+    windows = []
+    for _ in range(int(rng.integers(0, max_windows + 1))):
+        r = regions[int(rng.integers(0, len(regions)))]
+        start = rng.random() * duration
+        windows.append(OutageWindow(r, float(start),
+                                    float(start + rng.random() * max_frac
+                                          * duration)))
+    while windows:
+        sched = OutageSchedule(windows)
+        if sched.max_concurrent_down(regions) < len(regions):
+            return sched
+        windows.pop(int(rng.integers(0, len(windows))))
+    return OutageSchedule([])
 
 
 def make_workload(name: str, regions: Sequence[str], seed: int = 0,

@@ -1,0 +1,429 @@
+"""Chaos-plane coverage (§6.4: "availability and fault tolerance are on par
+with standard cloud offerings").
+
+The invariants this suite enforces, over random traces x random outage
+schedules AND hand-built deterministic edge cases:
+
+  (a) the two verification planes never diverge under failure injection --
+      per-GET failover decisions (incl. 503s), holder sets, counters,
+      deferred-sync counts, and dollar components all agree;
+  (b) no GET 503s while any region holding a replica of the object is up
+      (checked in its sharpest form: a replicate-everywhere policy under a
+      schedule that keeps >= 1 region live must serve every GET);
+  (c) outages only ever *add* cost, and only through failover egress when
+      placement is otherwise pinned (a replicate-everywhere policy pays
+      identical storage/ops, strictly more network).
+
+Deterministic edge cases: an outage spanning a SPANStore epoch boundary, a
+replica expiring mid-outage (guarded, collected lazily after recovery), the
+sole reachable copy being shielded from expiry AND hit-path eviction, §4.4
+sync-to-base deferred past a base outage, PUT redirect off a downed region,
+and the S3 proxy's 503 + Retry-After wire behaviour.
+"""
+
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import CostModel, Region, pick_regions
+from repro.core.engine import (
+    EXPIRE, REGION_DOWN, REGION_UP, EventSpine, OutageSchedule, OutageWindow,
+)
+from repro.core.expiry import ExpiryIndex
+from repro.core.replay import (
+    COST_RTOL, replay_differential, run_live_plane, run_sim_plane,
+)
+from repro.core.simulator import OP_DELETE, OP_GET, OP_PUT
+from repro.core.traces import EVENT_DTYPE, Trace
+from repro.core.workloads import (
+    make_outage_schedule, make_workload, random_outage_schedule,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+DAY = 24 * 3600.0
+HOUR = 3600.0
+REGIONS = ("aws:a", "aws:b", "gcp:c")
+
+
+def _tiny_cat() -> CostModel:
+    """Expensive storage / cheap egress => T_even ~43 min: TTL expiry,
+    eviction, and re-replication all happen inside short traces."""
+    regions = [Region(r, 10.0) for r in REGIONS]
+    eg = {(a, b): 0.01 for a in REGIONS for b in REGIONS if a != b}
+    return CostModel(regions, eg)
+
+
+def _asym_cat() -> CostModel:
+    """Asymmetric egress so failing over to the second-cheapest source is
+    measurably more expensive (the §6.4 cost-of-availability signal)."""
+    regions = [Region(r, 0.1) for r in REGIONS]
+    eg = {(a, b): 0.01 for a in REGIONS for b in REGIONS if a != b}
+    eg[("gcp:c", "aws:b")] = 0.05      # the failover edge under an aws:a outage
+    return CostModel(regions, eg)
+
+
+def _trace(rows, name="chaos") -> Trace:
+    ev = np.zeros(len(rows), dtype=EVENT_DTYPE)
+    for i, (t, op, obj, size, region) in enumerate(rows):
+        ev[i] = (t, op, obj, size, region, 0)
+    return Trace(name, ev, REGIONS, ("bucket-0",))
+
+
+def _build_random_trace(steps) -> Trace:
+    """Raw steps -> valid trace (first op per object is a PUT, nothing after
+    DELETE, strictly increasing timestamps)."""
+    rows, t, live = [], 0.0, {}
+    for obj, op, region, gap in steps:
+        t += gap
+        if op == OP_PUT:
+            live[obj] = True
+            rows.append((t, OP_PUT, obj, 4096 + obj, region))
+        elif op == OP_GET:
+            if live.get(obj):
+                rows.append((t, OP_GET, obj, 4096 + obj, region))
+        else:
+            if live.get(obj):
+                live[obj] = None
+                rows.append((t, OP_DELETE, obj, 0, region))
+    return _trace(rows)
+
+
+# ---------------------------------------------------------------------------
+# OutageSchedule unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_schedule_merges_and_orders_windows():
+    s = OutageSchedule([
+        OutageWindow("aws:a", 50.0, 100.0),
+        OutageWindow("aws:a", 90.0, 120.0),       # overlaps: merged
+        OutageWindow("aws:a", 120.0, 130.0),      # abuts: merged
+        OutageWindow("aws:b", 10.0, 10.0),        # empty: dropped
+        OutageWindow("gcp:c", -5.0, 20.0),        # clipped to t >= 0
+    ])
+    assert s.windows == (OutageWindow("gcp:c", 0.0, 20.0),
+                         OutageWindow("aws:a", 50.0, 130.0))
+    assert s.regions() == ("aws:a", "gcp:c")
+    # half-open windows: down at down_t, back up at up_t
+    assert s.is_down("aws:a", 50.0) and not s.is_down("aws:a", 130.0)
+    assert s.unavailable_at(60.0) == frozenset({"aws:a"})
+    assert s.max_concurrent_down(REGIONS) == 1
+
+
+def test_schedule_transitions_down_before_up_at_shared_t():
+    s = OutageSchedule([OutageWindow("aws:a", 10.0, 50.0),
+                        OutageWindow("aws:b", 50.0, 80.0)])
+    assert s.transitions() == [
+        (10.0, REGION_DOWN, "aws:a"),
+        (50.0, REGION_DOWN, "aws:b"),   # DOWN precedes UP at t=50
+        (50.0, REGION_UP, "aws:a"),
+        (80.0, REGION_UP, "aws:b"),
+    ]
+
+
+def test_named_profiles_are_deterministic_and_keep_one_region_live():
+    for prof in ("single", "rolling", "flaky"):
+        a = make_outage_schedule(prof, REGIONS, 10 * DAY, seed=7)
+        b = make_outage_schedule(prof, REGIONS, 10 * DAY, seed=7)
+        assert a.windows == b.windows
+        assert len(a) >= 1
+        assert a.max_concurrent_down(REGIONS) < len(REGIONS)
+    with pytest.raises(KeyError):
+        make_outage_schedule("nope", REGIONS, DAY)
+
+
+def test_spine_outage_transitions_drain_before_expiries():
+    """Contract step 1: at a shared timestamp the availability flip comes
+    first, so the expiry handler already sees the post-transition state."""
+    idx = ExpiryIndex()
+    idx.arm((1, "aws:a"), (1, "aws:a"), 100.0)
+    sched = OutageSchedule([OutageWindow("aws:a", 100.0, 200.0)])
+
+    class _Req:
+        at = 250.0
+    spine = EventSpine([_Req()], idx, scan_interval=1e9, horizon=250.0,
+                       outages=sched)
+    kinds = [(s.kind, s.t) for s in spine]
+    assert kinds.index((REGION_DOWN, 100.0)) < kinds.index((EXPIRE, 100.0))
+    assert (REGION_UP, 200.0) in kinds
+
+
+# ---------------------------------------------------------------------------
+# (a) fuzz: random traces x random outages never diverge across planes
+# ---------------------------------------------------------------------------
+
+_POLICIES = ("t_even", "skystore", "ewma", "always_evict", "cgp",
+             "always_store", "spanstore")
+
+
+def _check_chaos_trace(steps, policy, mode, outage_seed):
+    trace = _build_random_trace(steps)
+    if not len(trace.events) or not (trace.events["op"] == OP_GET).any():
+        return
+    sched = random_outage_schedule(REGIONS, trace.duration, seed=outage_seed)
+    r = replay_differential(trace, _tiny_cat(), policy, mode=mode,
+                            scan_interval=HOUR, outages=sched,
+                            outage="fuzz" if len(sched) else "")
+    assert r.placement_mismatches == [], r.placement_mismatches[:3]
+    assert r.holder_mismatches == [], r.holder_mismatches[:3]
+    assert r.counter_diffs == {}, r.counter_diffs
+    assert r.max_rel_cost_delta <= COST_RTOL
+
+
+@pytest.mark.parametrize("seed", range(16))
+def test_random_chaos_traces_sim_and_live_agree(seed):
+    rng = np.random.default_rng(seed * 7717 + 3)
+    n = int(rng.integers(6, 40))
+    steps = [
+        (int(rng.integers(0, 3)),
+         [OP_PUT, OP_GET, OP_GET, OP_GET, OP_DELETE][int(rng.integers(0, 5))],
+         int(rng.integers(0, 3)),
+         60.0 + float(rng.random()) * 2 * DAY)
+        for _ in range(n)
+    ]
+    policy = _POLICIES[seed % len(_POLICIES)]
+    mode = "FP" if seed % 3 == 0 else "FB"
+    _check_chaos_trace(steps, policy, mode, outage_seed=seed * 31 + 1)
+
+
+if HAVE_HYPOTHESIS:
+    _op_step = st.tuples(
+        st.integers(0, 2),
+        st.sampled_from([OP_PUT, OP_GET, OP_GET, OP_GET, OP_DELETE]),
+        st.integers(0, 2),
+        st.floats(60.0, 2 * DAY),
+    )
+
+    @settings(max_examples=30, deadline=None)
+    @given(steps=st.lists(_op_step, min_size=4, max_size=30),
+           policy=st.sampled_from(_POLICIES),
+           mode=st.sampled_from(["FB", "FP"]),
+           outage_seed=st.integers(0, 1000))
+    def test_random_chaos_traces_property(steps, policy, mode, outage_seed):
+        _check_chaos_trace(steps, policy, mode, outage_seed)
+
+
+# ---------------------------------------------------------------------------
+# (b) availability: a replica in a live region always serves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile", ("single", "rolling", "flaky"))
+def test_replicate_everywhere_never_503s(profile):
+    """aws_mrb pushes every PUT to all regions, never evicts: with >= 1
+    region live at any instant a GET always finds a reachable replica."""
+    cost = _tiny_cat()
+    trace = make_workload("zipfian", REGIONS, seed=3, n_objects=40,
+                          n_requests=400)
+    sched = make_outage_schedule(profile, REGIONS, trace.duration, seed=3)
+    r = replay_differential(trace, cost, "aws_mrb", outages=sched,
+                            outage=profile)
+    assert r.ok(), r.summary_line()
+    assert r.availability["gets_unavailable"] == 0
+    assert r.availability["fraction_served"] == 1.0
+
+
+def test_503_only_when_every_holder_down_and_availability_metric():
+    """always_evict keeps one copy (the base at aws:a): GETs during aws:a's
+    outage must 503, GETs before/after must serve -- and the availability
+    metric counts exactly those 503s on both planes."""
+    rows = [(100.0, OP_PUT, 0, 4096, 0)]
+    rows += [(10_000.0 * (i + 1), OP_GET, 0, 4096, 1) for i in range(10)]
+    trace = _trace(rows)                              # GETs at 10k..100k
+    sched = OutageSchedule([OutageWindow("aws:a", 35_000.0, 75_000.0)])
+    r = replay_differential(trace, _tiny_cat(), "always_evict",
+                            outages=sched, outage="edge")
+    assert r.ok(), r.summary_line()
+    # GETs at 40k..70k (4 of them) fall inside the window
+    assert r.availability["gets_unavailable"] == 4
+    assert r.availability["gets_served"] == 6
+    assert r.availability["fraction_served"] == pytest.approx(0.6)
+    # the decision stream records the 503s as error decisions, like the
+    # live driver does -- both planes, identically
+    sim = run_sim_plane(trace, _tiny_cat(), "always_evict", outages=sched)
+    n_503 = sum(1 for d in sim.decisions
+                if d[3] == "error:ServiceUnavailable")
+    assert n_503 == 4
+
+
+# ---------------------------------------------------------------------------
+# (c) outages only add cost, via failover egress
+# ---------------------------------------------------------------------------
+
+def test_outage_cost_increase_is_failover_egress_only():
+    """always_store under an outage that covers only the GET phase: the
+    placement (and hence storage + ops) is identical with and without the
+    outage; the only delta is the pricier failover edge."""
+    rows = [
+        (100.0, OP_PUT, 0, 1024 ** 2, 0),     # base at aws:a
+        (4000.0, OP_GET, 0, 1024 ** 2, 2),    # gcp:c replicates (a->c)
+        # during aws:a's outage: first GET from aws:b must source gcp:c
+        # at $0.05/GB instead of aws:a at $0.01/GB
+        (50_000.0, OP_GET, 0, 1024 ** 2, 1),
+        (90_000.0, OP_GET, 0, 1024 ** 2, 1),  # post-recovery: local hit at b
+    ]
+    trace = _trace(rows)
+    cost = _asym_cat()
+    base = replay_differential(trace, cost, "always_store")
+    sched = OutageSchedule([OutageWindow("aws:a", 40_000.0, 60_000.0)])
+    chaos = replay_differential(trace, cost, "always_store", outages=sched,
+                                outage="edge")
+    assert base.ok() and chaos.ok()
+    assert chaos.sim_costs["storage"] == pytest.approx(
+        base.sim_costs["storage"], rel=1e-12)
+    assert chaos.sim_costs["ops"] == pytest.approx(
+        base.sim_costs["ops"], rel=1e-12)
+    extra = chaos.sim_costs["network"] - base.sim_costs["network"]
+    assert extra == pytest.approx((0.05 - 0.01) * 1024 ** 2 / 1024 ** 3,
+                                  rel=1e-9)
+    assert chaos.sim_costs["total"] > base.sim_costs["total"]
+
+
+# ---------------------------------------------------------------------------
+# Deterministic edge cases
+# ---------------------------------------------------------------------------
+
+def test_replica_expiring_mid_outage_is_collected_after_recovery():
+    """A cache replica whose TTL lapses while its region is dark survives
+    (the delete cannot run), then the stepped expiry collects it after
+    recovery -- identically in both planes."""
+    rows = [
+        (100.0, OP_PUT, 0, 4096, 0),          # base aws:a
+        (1000.0, OP_GET, 0, 4096, 1),         # cache at aws:b, TTL ~43 min
+        (200_000.0, OP_GET, 0, 4096, 2),      # post-recovery activity
+    ]
+    trace = _trace(rows)
+    # aws:b goes dark before the ~43-min TTL lapses, recovers much later
+    sched = OutageSchedule([OutageWindow("aws:b", 1060.0, 100_000.0)])
+    r = replay_differential(trace, _tiny_cat(), "t_even", outages=sched,
+                            outage="edge", scan_interval=HOUR)
+    assert r.ok(), r.summary_line()
+    sim = run_sim_plane(trace, _tiny_cat(), "t_even", scan_interval=HOUR,
+                        outages=sched)
+    # the expired aws:b replica is gone by the horizon, base survives
+    assert "aws:b" not in sim.holders[0]
+    assert "aws:a" in sim.holders[0]
+    assert sim.report.n_unavailable == 0      # every GET was served
+
+
+def test_sole_reachable_copy_shielded_from_expiry_and_hit_eviction():
+    """With the base region dark, the one reachable cache copy must survive
+    both its own TTL expiry and a clairvoyant evict-now decision (CGP sees
+    no future GET at the region and returns ttl=0 on the hit path);
+    availability stays 1.0 and the shielded copy is lazily collected after
+    recovery."""
+    rows = [
+        (100.0, OP_PUT, 0, 4096, 0),          # base aws:a
+        (1000.0, OP_GET, 0, 4096, 1),         # CGP caches at aws:b (next GET soon)
+        (2000.0, OP_GET, 0, 4096, 1),         # hit; TTL re-armed to the next GET
+        # aws:a goes dark at 2100; at 3000 CGP sees no future GET at aws:b
+        # and says evict-now -- the sole-reachable shield must refuse
+        (3000.0, OP_GET, 0, 4096, 1),
+        (50_000.0, OP_GET, 0, 4096, 2),       # served from the shielded copy
+        (400_000.0, OP_GET, 0, 4096, 2),      # post-recovery: served from base
+    ]
+    trace = _trace(rows)
+    sched = OutageSchedule([OutageWindow("aws:a", 2100.0, 300_000.0)])
+    r = replay_differential(trace, _tiny_cat(), "cgp", outages=sched,
+                            outage="edge", scan_interval=HOUR)
+    assert r.ok(), r.summary_line()
+    assert r.availability["fraction_served"] == 1.0
+    sim = run_sim_plane(trace, _tiny_cat(), "cgp", scan_interval=HOUR,
+                        outages=sched)
+    # after recovery the shielded copy was collected; the base survives
+    assert sim.holders[0] == ("aws:a",)
+
+
+def test_deferred_sync_to_base_replays_at_recovery():
+    """§4.4 + §6.4: a cross-region overwrite while the base is dark defers
+    the base sync; at REGION_UP the base replica is restored (pinned) from
+    the cheapest live holder, on both planes."""
+    rows = [
+        (100.0, OP_PUT, 0, 4096, 0),          # base aws:a
+        (50_000.0, OP_PUT, 0, 4096, 1),       # overwrite at aws:b, a is dark
+        (90_000.0, OP_GET, 0, 4096, 2),       # served from b during outage
+        (300_000.0, OP_GET, 0, 4096, 2),      # post-recovery
+    ]
+    trace = _trace(rows)
+    sched = OutageSchedule([OutageWindow("aws:a", 40_000.0, 200_000.0)])
+    r = replay_differential(trace, _tiny_cat(), "skystore", outages=sched,
+                            outage="edge", scan_interval=HOUR)
+    assert r.ok(), r.summary_line()
+    assert r.availability["deferred_syncs"] == 1
+    sim = run_sim_plane(trace, _tiny_cat(), "skystore", outages=sched)
+    live = run_live_plane(trace, _tiny_cat(), "skystore", outages=sched)
+    assert "aws:a" in sim.holders[0]          # base restored after recovery
+    assert sim.holders == live.holders
+    assert sim.report.n_deferred_syncs == live.report.n_deferred_syncs == 1
+
+
+def test_put_at_downed_region_redirects():
+    """The first PUT of an object whose issuing region is dark lands at the
+    cheapest live region, which becomes the (pinned) base -- no 503."""
+    rows = [
+        (50_000.0, OP_PUT, 0, 4096, 0),       # aws:a is dark: redirect
+        (60_000.0, OP_GET, 0, 4096, 0),       # GET from the dark region: failover
+        (300_000.0, OP_GET, 0, 4096, 1),
+    ]
+    trace = _trace(rows)
+    sched = OutageSchedule([OutageWindow("aws:a", 40_000.0, 200_000.0)])
+    r = replay_differential(trace, _tiny_cat(), "t_even", outages=sched,
+                            outage="edge")
+    assert r.ok(), r.summary_line()
+    assert r.availability["fraction_served"] == 1.0
+    sim = run_sim_plane(trace, _tiny_cat(), "t_even", outages=sched)
+    assert "aws:a" not in sim.holders[0]      # never landed on the dark region
+
+
+def test_outage_spanning_epoch_boundary_spanstore():
+    """SPANStore re-solves hourly; an outage spanning several boundaries
+    must leave both planes agreeing on every epoch's replica sets (downed
+    replicas are skipped by the epoch pruner until recovery)."""
+    rng = np.random.default_rng(11)
+    rows = [(float(100 + o * 7), OP_PUT, o, 8192, int(o % 3))
+            for o in range(6)]
+    t = 1000.0
+    for _ in range(120):
+        t += float(rng.integers(200, 800))
+        rows.append((t, OP_GET, int(rng.integers(0, 6)), 8192,
+                     int(rng.integers(0, 3))))
+    trace = _trace(rows)
+    # one outage covering multiple hourly epoch boundaries
+    sched = OutageSchedule([OutageWindow("aws:b", 2 * HOUR + 300.0,
+                                         5 * HOUR + 300.0)])
+    r = replay_differential(trace, _tiny_cat(), "spanstore", outages=sched,
+                            outage="edge", scan_interval=HOUR)
+    assert r.ok(), r.summary_line()
+
+
+def test_s3_proxy_returns_503_with_retry_after():
+    """End of the wire: when no reachable replica exists the proxy answers
+    503 ServiceUnavailable with a Retry-After header, and serves again
+    after recovery."""
+    from repro.core.backends import InMemoryBackend
+    from repro.core.s3_proxy import S3Proxy
+    from repro.core.virtual_store import VirtualStore
+
+    cost = _tiny_cat()
+    backends = {r: InMemoryBackend(r) for r in REGIONS}
+    store = VirtualStore(cost, backends)
+    store.create_bucket("b")
+    store.put_object("b", "k", b"payload", "aws:a")
+    proxy = S3Proxy(store, "aws:b").start()
+    try:
+        store.region_down("aws:a")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{proxy.endpoint}/b/k")
+        assert ei.value.code == 503
+        assert ei.value.headers["Retry-After"] == "1"
+        assert b"ServiceUnavailable" in ei.value.read()
+        store.region_up("aws:a")
+        with urllib.request.urlopen(f"{proxy.endpoint}/b/k") as resp:
+            assert resp.read() == b"payload"
+    finally:
+        proxy.stop()

@@ -24,6 +24,9 @@ from repro.core.costmodel import CostModel, Region, pick_regions
 from repro.core.ledger import CostLedger
 from repro.core.replay import (
     COST_RTOL,
+    GOLDEN_OUTAGE_POLICIES,
+    GOLDEN_OUTAGE_PROFILES,
+    GOLDEN_OUTAGE_WORKLOAD,
     GOLDEN_POLICIES,
     GOLDEN_RTOL,
     GOLDEN_SEED,
@@ -77,6 +80,53 @@ def test_golden_zero_divergence_and_cost_regression(cost, workload, policy):
     for plane, got in (("sim", r.sim_costs), ("live", r.live_costs)):
         for k, v in want[plane].items():
             assert rel_delta(v, got[k]) <= GOLDEN_RTOL, (plane, k, v, got[k])
+
+
+@pytest.mark.parametrize("policy", GOLDEN_OUTAGE_POLICIES)
+@pytest.mark.parametrize("profile", GOLDEN_OUTAGE_PROFILES)
+def test_outage_golden_zero_divergence_and_regression(cost, profile, policy):
+    """The §6.4 chaos matrix: under injected region outages the planes must
+    still agree on everything -- failover routing, 503s, deferred syncs,
+    holder sets, bills -- and the agreed numbers (availability metric
+    included) must match the checked-in outage fixtures."""
+    from repro.core.workloads import make_outage_schedule
+    trace = _trace(cost, GOLDEN_OUTAGE_WORKLOAD)
+    sched = make_outage_schedule(profile, cost.region_names(),
+                                 trace.duration, seed=GOLDEN_SEED)
+    r = replay_differential(trace, cost, policy,
+                            workload=GOLDEN_OUTAGE_WORKLOAD,
+                            outages=sched, outage=profile)
+    # -- the differential invariant survives failure injection -----------
+    assert r.placement_mismatches == [], r.placement_mismatches[:3]
+    assert r.holder_mismatches == [], r.holder_mismatches[:3]
+    assert r.counter_diffs == {}
+    assert r.max_rel_cost_delta <= COST_RTOL
+    # -- the golden regression, availability metric included -------------
+    p = golden_path(GOLDEN_DIR, GOLDEN_OUTAGE_WORKLOAD, policy, profile)
+    assert os.path.exists(p), f"missing fixture {p}; run --update-golden"
+    with open(p) as f:
+        want = json.load(f)
+    assert want["counters"] == r.sim_counters
+    assert want["outage"] == profile
+    for k, v in want["availability"].items():
+        assert rel_delta(v, r.availability[k]) <= GOLDEN_RTOL, (k, v)
+    for plane, got in (("sim", r.sim_costs), ("live", r.live_costs)):
+        for k, v in want[plane].items():
+            assert rel_delta(v, got[k]) <= GOLDEN_RTOL, (plane, k, v, got[k])
+
+
+def test_outage_fixture_matrix_complete_and_orthogonal():
+    """All 12 chaos fixtures exist; outage-free fixtures carry no outage
+    keys (schema byte-compat with the pre-chaos matrix)."""
+    for prof in GOLDEN_OUTAGE_PROFILES:
+        for pol in GOLDEN_OUTAGE_POLICIES:
+            p = golden_path(GOLDEN_DIR, GOLDEN_OUTAGE_WORKLOAD, pol, prof)
+            assert os.path.exists(p), p
+            with open(p) as f:
+                doc = json.load(f)
+            assert doc["availability"]["gets_unavailable"] >= 0
+    with open(golden_path(GOLDEN_DIR, "zipfian", "skystore")) as f:
+        assert "availability" not in json.load(f)
 
 
 def test_physical_traffic_bounds_match_ledger(cost):
