@@ -1,0 +1,23 @@
+"""replaylint: AST-based determinism & cross-plane contract checker.
+
+The differential-replay harness (repro.core.replay) proves *dynamically*
+that the simulator and the live plane agree; this package proves the
+preconditions *statically*: no wall-clock reads, no unseeded RNGs, no
+hash-order iteration, no expiry-index bypasses, and symmetric cost charges
+across the two planes.  Run it as::
+
+    python -m repro.analysis src/repro/core
+
+See docs/ARCHITECTURE.md ("Determinism contract") for the rule catalog and
+the suppression idiom.
+"""
+
+from .framework import (  # noqa: F401
+    AnalysisResult,
+    Finding,
+    Module,
+    Rule,
+    UsageError,
+    run_analysis,
+)
+from .rules import RULE_CLASSES, make_rules  # noqa: F401

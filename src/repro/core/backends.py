@@ -15,8 +15,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
-import time
-from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -31,6 +30,14 @@ class Backend:
     """One physical region's object store."""
 
     region: str
+    #: Injected time source for ``last_modified`` stamps.  Backends never
+    #: read the host clock themselves (replaylint RS001): the VirtualStore
+    #: boundary installs its plane clock here, and a bare backend stamps the
+    #: virtual-time origin 0.0 -- deterministic either way.
+    clock: Optional[Callable[[], float]] = None
+
+    def _stamp(self) -> float:
+        return self.clock() if self.clock is not None else 0.0
 
     def put(self, bucket: str, key: str, data: bytes) -> HeadResult:
         raise NotImplementedError
@@ -95,7 +102,7 @@ class InMemoryBackend(Backend):
         self.bytes_out = 0
 
     def put(self, bucket, key, data):
-        h = HeadResult(key, len(data), _etag(data), time.time())
+        h = HeadResult(key, len(data), _etag(data), self._stamp())
         self._data[(bucket, key)] = (bytes(data), h)
         self.op_counts["put"] += 1
         self.bytes_in += len(data)
@@ -154,7 +161,7 @@ class FSBackend(Backend):
         with open(tmp, "wb") as f:
             f.write(data)
         os.replace(tmp, p)            # atomic within the region
-        return HeadResult(key, len(data), _etag(data), time.time())
+        return HeadResult(key, len(data), _etag(data), self._stamp())
 
     def put_stream(self, bucket, key, chunks):
         """True streaming write: chunks go straight to the temp file, so
@@ -171,7 +178,7 @@ class FSBackend(Backend):
                 md5.update(c)
                 size += len(c)
         os.replace(tmp, p)            # atomic within the region
-        return HeadResult(key, size, md5.hexdigest(), time.time())
+        return HeadResult(key, size, md5.hexdigest(), self._stamp())
 
     def get(self, bucket, key, byte_range=None):
         p = self._path(bucket, key)

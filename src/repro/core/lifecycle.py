@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from .ttl_policy import AdaptiveTTLController
 

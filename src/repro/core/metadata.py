@@ -20,7 +20,6 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import json
-import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -173,9 +172,16 @@ class MetadataServer:
         ledger: Optional[CostLedger] = None,
         min_fp_copies: int = 1,
         oracle=None,
+        clock=None,
     ) -> None:
         self.cost = cost
         self.mode = mode
+        #: Injected time source for callers that omit ``now=`` (the
+        #: VirtualStore boundary installs its own clock here).  The metadata
+        #: server itself never reads the host clock: with no injected clock
+        #: an omitted ``now`` resolves to the virtual-time origin 0.0, so a
+        #: bare server stays deterministic (replaylint RS001).
+        self.clock = clock
         self.ctl = controller or AdaptiveTTLController(cost)
         self.pending_timeout = pending_timeout
         self.versioning = versioning
@@ -212,9 +218,17 @@ class MetadataServer:
         self._pending: Dict[Tuple[str, str, str, int], float] = {}
         self.op_log: List[dict] = []
 
+    def _now(self, now: Optional[float]) -> float:
+        """Resolve an optional event time: explicit ``now`` wins, then the
+        injected clock, then the virtual-time origin."""
+        if now is not None:
+            return now
+        return self.clock() if self.clock is not None else 0.0
+
     # -- buckets ---------------------------------------------------------------
-    def create_bucket(self, bucket: str, **attrs) -> None:
-        self.buckets.setdefault(bucket, dict(created=time.time(), **attrs))
+    def create_bucket(self, bucket: str, now: Optional[float] = None,
+                      **attrs) -> None:
+        self.buckets.setdefault(bucket, dict(created=self._now(now), **attrs))
         self._key_index.setdefault(bucket, [])
 
     def list_buckets(self) -> List[str]:
@@ -256,7 +270,7 @@ class MetadataServer:
         self, bucket: str, key: str, region: str, size: int, now: Optional[float] = None
     ) -> int:
         """Phase 1: log the intent; returns the version this upload will commit."""
-        now = time.time() if now is None else now
+        now = self._now(now)
         if bucket not in self.buckets:
             raise ApiError("NoSuchBucket", f"no such bucket {bucket!r}")
         om = self.objects.get((bucket, key))
@@ -277,7 +291,7 @@ class MetadataServer:
         etag: str, now: Optional[float] = None,
     ) -> VersionMeta:
         """Phase 2: commit -- only now does the object become visible (§4.5)."""
-        now = time.time() if now is None else now
+        now = self._now(now)
         if (bucket, key, region, version) not in self._pending:
             raise ApiError("NoSuchUpload",
                            "complete_upload without matching begin_upload")
@@ -325,7 +339,7 @@ class MetadataServer:
 
     def expire_pending(self, now: Optional[float] = None) -> List[Tuple]:
         """Roll back uploads whose proxy died mid-write (§4.5 timeout)."""
-        now = time.time() if now is None else now
+        now = self._now(now)
         stale = [k for k, t0 in self._pending.items()
                  if now - t0 > self.pending_timeout]
         for k in stale:
@@ -339,7 +353,7 @@ class MetadataServer:
     ) -> Tuple[VersionMeta, str, bool]:
         """Route a GET: returns (version, source region, was_local_hit) --
         cheapest committed replica per §2.3, directed at the latest version."""
-        now = time.time() if now is None else now
+        now = self._now(now)
         om = self.objects.get((bucket, key))
         if om is None or not om.versions:
             raise ApiError("NoSuchKey", f"{bucket}/{key} not found")
@@ -377,7 +391,7 @@ class MetadataServer:
         self, bucket: str, key: str, region: str, size: int, hit: bool,
         now: Optional[float] = None,
     ) -> None:
-        now = time.time() if now is None else now
+        now = self._now(now)
         gk = (bucket, key, region)
         prev = self._last_get.get(gk)
         if prev is not None:
@@ -394,7 +408,7 @@ class MetadataServer:
         An explicit ``ttl`` overrides the built-in controller -- that is how a
         pluggable :class:`~repro.core.policies.Policy` drives the live plane
         (see ``VirtualStore(policy=...)``)."""
-        now = time.time() if now is None else now
+        now = self._now(now)
         om = self.objects[(bucket, key)]
         vm = om.latest
         if ttl is None:
@@ -416,7 +430,7 @@ class MetadataServer:
                       now: Optional[float] = None,
                       ttl: Optional[float] = None) -> None:
         """TTL reset on access (§3.2.1); explicit ``ttl`` = policy override."""
-        now = time.time() if now is None else now
+        now = self._now(now)
         om = self.objects[(bucket, key)]
         vm = om.latest
         rm = vm.replicas.get(region)
@@ -433,7 +447,7 @@ class MetadataServer:
                      count_eviction: bool = False) -> Optional[int]:
         """Forget one replica (policy-driven eviction, read-repair).  Returns
         the version whose physical blob the caller should DELETE, or None."""
-        now = time.time() if now is None else now
+        now = self._now(now)
         om = self.objects.get((bucket, key))
         vm = om.latest if om is not None else None
         rm = vm.replicas.pop(region, None) if vm is not None else None
@@ -472,7 +486,7 @@ class MetadataServer:
         surviving copy is never evicted: its expiry is re-armed instead
         (§3.2.1); a re-arm still below ``now`` pops again within this scan.
         """
-        now = time.time() if now is None else now
+        now = self._now(now)
         out = []
         for texp, ident in self.expiry.pop_due(now):
             victim = self.expire_replica(ident, texp)
@@ -549,7 +563,7 @@ class MetadataServer:
 
     def delete_object(self, bucket: str, key: str,
                       now: Optional[float] = None) -> List[Tuple[str, int]]:
-        now = time.time() if now is None else now
+        now = self._now(now)
         om = self.objects.pop((bucket, key), None)
         if om is None:
             return []

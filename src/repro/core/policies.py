@@ -352,7 +352,10 @@ class SPANStore(Policy):
         get_bytes: Dict[str, Dict[str, float]],
         put_bytes: Dict[str, Dict[str, float]],
     ) -> None:
-        for bucket in set(get_bytes) | set(put_bytes):
+        # sorted(): bucket order must not depend on PYTHONHASHSEED -- each
+        # bucket solves independently, but decision-path iteration stays
+        # deterministic by contract (replaylint RS003).
+        for bucket in sorted(set(get_bytes) | set(put_bytes)):
             gb_ = get_bytes.get(bucket, {})
             pb_ = put_bytes.get(bucket, {})
             self.replica_sets[bucket] = self._solve_bucket(gb_, pb_)
@@ -428,13 +431,15 @@ class SkyStorePolicy(Policy):
     ):
         super().__init__(cost)
         self.size_stratified = size_stratified
-        self._mk = lambda: AdaptiveTTLController(
-            cost,
+        self._ctl_kwargs = dict(
             refresh_period=refresh_period,
             warmup_min_samples=warmup_min_samples,
             u_perf_val_per_gb=u_perf_val_per_gb,
         )
         self.ctl = self._mk()
+
+    def _mk(self) -> AdaptiveTTLController:
+        return AdaptiveTTLController(self.cost, **self._ctl_kwargs)
 
     def reset(self) -> None:
         self.ctl = self._mk()

@@ -140,11 +140,23 @@ class VirtualStore:
         #: Optional live-plane cost accounting (repro.core.ledger).
         self.ledger = ledger
         self.min_fp_copies = min_fp_copies
+        # The ONE sanctioned wall-clock default in the storage core: a real
+        # deployment needs host time at the serving boundary, while replay
+        # always injects a virtual clock.  Everything downstream (metadata
+        # server, backends) takes time from here -- never from the host
+        # directly (see docs/ARCHITECTURE.md, "Determinism contract").
+        self._clock = clock or time.time  # replaylint: disable=RS001
         # Policy mode runs last-writer-wins: the simulator models a single
         # live version, so superseded replicas must drop on overwrite.
         self.meta = meta or MetadataServer(cost, mode=self.mode, ledger=ledger,
                                            versioning=policy is None,
-                                           min_fp_copies=min_fp_copies)
+                                           min_fp_copies=min_fp_copies,
+                                           clock=self._clock)
+        if self.meta.clock is None:
+            self.meta.clock = self._clock
+        for be in backends.values():
+            if be.clock is None:
+                be.clock = self._clock
         #: Future knowledge for clairvoyant policies (§3.1.1): a
         #: :class:`~repro.core.oracle.TraceOracle` (or anything implementing
         #: :class:`~repro.core.policies.Oracle`).  Shared with the metadata
@@ -199,7 +211,6 @@ class VirtualStore:
         #: §4.4 syncs deferred past a base-region outage:
         #: (bucket, key) -> write-local landing region; drained at region_up.
         self._pending_sync: Dict[Tuple[str, str], str] = {}
-        self._clock = clock or time.time
         self._mpu: Dict[str, _MultipartUpload] = {}
         # policy-mode bookkeeping, mirroring Simulator._last_get/_open_last
         self._last_get: Dict[Tuple[str, str, str], float] = {}
@@ -217,7 +228,7 @@ class VirtualStore:
 
     # -- bucket ops -----------------------------------------------------------
     def _handle_create_bucket(self, op: CreateBucketRequest) -> Ack:
-        self.meta.create_bucket(op.bucket)
+        self.meta.create_bucket(op.bucket, now=self._now(op))
         return Ack()
 
     def _handle_delete_bucket(self, op: DeleteBucketRequest) -> Ack:
