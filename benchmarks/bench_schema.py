@@ -1,0 +1,104 @@
+"""Schema diff for the committed BENCH artifact (``BENCH_7.json``).
+
+CI regenerates the artifact at smoke scale (``--smoke --json-out``) on every
+push; the *values* are machine-dependent throwaways, but the *shape* is the
+contract -- every dotted key path present in the committed artifact must be
+present in the regenerated one and vice versa (so a benchmark section can't
+silently vanish, and new sections can't land without refreshing the
+committed copy).  Two deliberate exemptions:
+
+* ``failures`` -- a list of strings, length varies by run (the smoke gate
+  handles its content; here only the key's existence matters);
+* ``smoke_differential`` -- present only in smoke-scale artifacts (the
+  committed copy is a full-scale run), so it is compared only when both
+  sides carry it.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_schema BENCH_7.json /tmp/smoke.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Set
+
+#: Key paths whose *subtrees* are run-scale-dependent: compared only when
+#: present on both sides, never required.
+OPTIONAL_SUBTREES = ("smoke_differential",)
+
+
+def key_paths(obj: Any, prefix: str = "") -> Set[str]:
+    """Every dotted path to a leaf or dict key in ``obj``.  Lists are
+    leaves (their length varies run to run)."""
+    if not isinstance(obj, dict):
+        return {prefix} if prefix else set()
+    out: Set[str] = set()
+    for k, v in obj.items():
+        p = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out |= key_paths(v, p)
+            out.add(p)
+        else:
+            out.add(p)
+    return out
+
+
+def _strip_optional(paths: Set[str], other: Set[str]) -> Set[str]:
+    """Drop optional-subtree paths unless the other side carries them too
+    (one-sided optional keys are not drift; asymmetries inside a subtree
+    both sides carry still are)."""
+    return {p for p in paths
+            if p.split(".", 1)[0] not in OPTIONAL_SUBTREES or p in other}
+
+
+def diff_schemas(committed: dict, regenerated: dict) -> list:
+    """Return a list of human-readable schema drift messages (empty ==
+    schemas agree).  ``bench_version`` must match exactly -- a version bump
+    without refreshing the committed artifact is itself drift."""
+    problems = []
+    cv = committed.get("bench_version")
+    rv = regenerated.get("bench_version")
+    if cv != rv:
+        problems.append(f"bench_version mismatch: committed={cv!r} "
+                        f"regenerated={rv!r}")
+    a = key_paths(committed)
+    b = key_paths(regenerated)
+    a, b = _strip_optional(a, b), _strip_optional(b, a)
+    # scale legitimately differs ("full" committed vs "smoke" regenerated);
+    # the key itself is still required on both sides (checked above).
+    for missing in sorted(a - b):
+        problems.append(f"key path missing from regenerated artifact: "
+                        f"{missing}")
+    for extra in sorted(b - a):
+        problems.append(f"key path absent from committed artifact "
+                        f"(refresh BENCH_7.json): {extra}")
+    return problems
+
+
+def main(argv: list) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    try:
+        with open(argv[1]) as f:
+            committed = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"BENCH SCHEMA FAIL: cannot read committed artifact "
+              f"{argv[1]}: {e}")
+        return 1
+    with open(argv[2]) as f:
+        regenerated = json.load(f)
+    problems = diff_schemas(committed, regenerated)
+    if problems:
+        for p in problems:
+            print("BENCH SCHEMA FAIL:", p)
+        return 1
+    print(f"bench schema OK: {argv[1]} and {argv[2]} agree on "
+          f"{len(key_paths(committed))} key paths")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

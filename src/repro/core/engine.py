@@ -60,7 +60,8 @@ from typing import (
 from .expiry import ExpiryIndex
 
 __all__ = [
-    "EventSpine", "SpineEvent", "OutageSchedule", "OutageWindow",
+    "EventSpine", "SpineEvent", "SpineBatch", "OutageSchedule",
+    "OutageWindow",
     "EXPIRE", "TICK", "EPOCH", "DATA", "END", "REGION_DOWN", "REGION_UP",
 ]
 
@@ -81,6 +82,24 @@ class SpineEvent:
     ident: Optional[Hashable] = None  # EXPIRE: the ExpiryIndex ident
     epoch: int = -1                 # EPOCH: the new epoch index
     region: Optional[str] = None    # REGION_DOWN / REGION_UP: which region
+
+
+@dataclasses.dataclass
+class SpineBatch:
+    """One chunk of the batched stream (:meth:`EventSpine.iter_batches`).
+
+    ``DATA`` batches carry a run of consecutive trace requests with no tick,
+    epoch, or outage boundary between them; ``EXPIRE`` batches carry one
+    drain round off the :class:`ExpiryIndex`; every other kind is a
+    singleton carrying the same payload as the scalar :class:`SpineEvent`.
+    """
+
+    kind: str
+    t: float
+    requests: Optional[List] = None              # DATA: the request run
+    pops: Optional[List[Tuple[float, Hashable]]] = None  # EXPIRE: one round
+    epoch: int = -1                              # EPOCH: new epoch index
+    region: Optional[str] = None                 # REGION_DOWN / REGION_UP
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,3 +252,89 @@ class EventSpine:
             yield SpineEvent(DATA, t, request=req)
         yield from self._drain(self.horizon)
         yield SpineEvent(END, self.horizon)
+
+    # -- batched consumption -------------------------------------------------
+    #
+    # iter_batches() replaces the per-event scalar stream with chunked
+    # delivery: DATA requests arrive in runs, EXPIRE pops arrive one drain
+    # round at a time (so consumers can vectorize ledger charges), and the
+    # timer singletons keep the scalar ordering contract.  The chunking rule
+    # is purely *formation-time*: a run breaks only at boundaries knowable
+    # without dispatching anything (a tick came due, an outage transition
+    # came due, the epoch index changed).  Expiries can NOT be a
+    # formation-time boundary, because dispatching a request inside a run
+    # may arm an expiry that falls due before the run's next request
+    # (TTL=0 arms at exactly t).  The consumer therefore owes the spine one
+    # obligation, packaged as :meth:`drain_due`:
+    #
+    #   before dispatching EACH request of a DATA batch, drain due expiries
+    #   up to that request's timestamp.
+    #
+    # With that obligation met, the batched stream observes events in
+    # exactly the scalar __iter__ order -- the golden matrix pins it.
+
+    def _expire_batches(self, now: float) -> Iterator[SpineBatch]:
+        """Drain rounds at ``now``: each yielded round is fully processed by
+        the consumer before the next peek, so re-arms landing back under
+        ``now`` surface in a later round (lazy re-arm semantics)."""
+        expiry = self.expiry
+        p = expiry.peek()
+        while p is not None and p <= now:
+            yield SpineBatch(EXPIRE, now, pops=expiry.pop_due_batch(now))
+            p = expiry.peek()
+
+    @staticmethod
+    def drain_due(expiry: ExpiryIndex, now: float, on_round) -> None:
+        """The DATA-batch consumer obligation: drain every due expiry round
+        before dispatching a request at ``now``.  O(1) when nothing is due
+        (one heap peek) -- this is the common case inside a run."""
+        p = expiry.peek()
+        while p is not None and p <= now:
+            on_round(expiry.pop_due_batch(now))
+            p = expiry.peek()
+
+    def iter_batches(self, max_chunk: int = 4096) -> Iterator[SpineBatch]:
+        """The chunked stream.  ``max_chunk`` bounds DATA-run buffering for
+        streaming traces; splitting a run is always semantics-preserving."""
+        transitions = (list(self.outages.transitions())
+                       if self.outages is not None else [])
+        epoch_len = self.epoch_len
+        next_tick = self.scan_interval
+        epoch_idx = -1
+        chunk: List = []
+
+        for req in self.requests:
+            t = float(req.at)
+            if (next_tick > t
+                    and not (transitions and transitions[0][0] <= t)
+                    and (epoch_len is None
+                         or int(t // epoch_len) == epoch_idx)
+                    and len(chunk) < max_chunk):
+                chunk.append(req)
+                continue
+            if chunk:
+                yield SpineBatch(DATA, float(chunk[0].at), requests=chunk)
+                chunk = []
+            while next_tick <= t:
+                while transitions and transitions[0][0] <= next_tick:
+                    t0, kind, region = transitions.pop(0)
+                    yield SpineBatch(kind, t0, region=region)
+                yield from self._expire_batches(next_tick)
+                yield SpineBatch(TICK, next_tick)
+                next_tick += self.scan_interval
+            while transitions and transitions[0][0] <= t:
+                t0, kind, region = transitions.pop(0)
+                yield SpineBatch(kind, t0, region=region)
+            if epoch_len is not None:
+                e = int(t // epoch_len)
+                if e != epoch_idx:
+                    epoch_idx = e
+                    yield SpineBatch(EPOCH, t, epoch=e)
+            chunk.append(req)
+        if chunk:
+            yield SpineBatch(DATA, float(chunk[0].at), requests=chunk)
+        while transitions and transitions[0][0] <= self.horizon:
+            t0, kind, region = transitions.pop(0)
+            yield SpineBatch(kind, t0, region=region)
+        yield from self._expire_batches(self.horizon)
+        yield SpineBatch(END, self.horizon)

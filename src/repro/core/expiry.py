@@ -126,6 +126,34 @@ class ExpiryIndex:
             self.n_pops += 1
             yield expire, ident
 
+    def pop_due_batch(self, now: float) -> List[Tuple[float, Hashable]]:
+        """One drain *round*: consume every entry due at call time and return
+        them as a list in ``(expire, order, insertion)`` order.
+
+        Unlike :meth:`pop_due`, the consumer's reaction is not interleaved
+        per entry -- it processes the whole round, and anything it re-armed
+        back under ``now`` surfaces in the *next* round (callers loop until
+        an empty round).  Round-based draining is outcome-identical to the
+        generator: guard re-arms (sole-copy / unavailable-region / FP
+        minimums) can never become droppable within one drain -- the
+        unavailable set is constant and replica counts only shrink -- so
+        every actual drop happens on an entry's first pop, in heap order,
+        in both schedules.  Batching exists so consumers can vectorize the
+        per-round ledger charges.
+        """
+        out: List[Tuple[float, Hashable]] = []
+        heap = self._heap
+        while heap and heap[0][0] <= now:
+            expire, _order, _seq, gen, ident = heapq.heappop(heap)
+            if self._gen.get(ident) != gen:
+                self.n_stale += 1
+                continue
+            self._bump(ident)
+            del self._armed[ident]
+            self.n_pops += 1
+            out.append((expire, ident))
+        return out
+
 
 class KeyInterner:
     """Stable dense object ids for arbitrary string keys.

@@ -149,15 +149,48 @@ class RollingHistogram:
         self.current = AccessHistogram.empty(edges)
         self.previous: AccessHistogram | None = None
         self.window_start = 0.0
+        # Pending (gap, size) samples queued by queue_gap: the ingestion hot
+        # path appends two floats instead of paying the full numpy
+        # atleast_1d/broadcast/add.at machinery per sample; flush() applies
+        # them in one vectorized add_gaps call.  np.add.at accumulates
+        # sequentially in index order, so the flushed result is bit-identical
+        # to per-sample adds.
+        self._pending_dt: list = []
+        self._pending_sz: list = []
+
+    def queue_gap(self, dt: float, size: float) -> None:
+        """Buffer one re-read gap sample; applied on the next :meth:`flush`
+        (which :meth:`merged` and :meth:`rotate` run implicitly)."""
+        self._pending_dt.append(dt)
+        self._pending_sz.append(size)
+
+    def flush(self) -> None:
+        """Apply queued gap samples to the current window, vectorized."""
+        if self._pending_dt:
+            self.current.add_gaps(
+                np.asarray(self._pending_dt, dtype=np.float64),
+                np.asarray(self._pending_sz, dtype=np.float64),
+            )
+            self._pending_dt.clear()
+            self._pending_sz.clear()
 
     def rotate(self, now: float) -> None:
+        self.flush()
         self.previous = self.current
         self.current = AccessHistogram.empty(self.current.edges)
         self.window_start = now
 
     def merged(self) -> AccessHistogram:
+        """A point-in-time snapshot of the estimation view.  Both branches
+        return a *defensive* copy: callers may decay() or otherwise mutate
+        the returned histogram (TTL estimation experiments do) without
+        corrupting the live collection window."""
+        self.flush()
         if self.previous is None:
-            return self.current
+            c = self.current
+            return AccessHistogram(c.edges, c.hist.copy(), c.time_weight.copy(),
+                                   c.last.copy(), c.first_read_remote_bytes,
+                                   c.n_samples)
         m = self.current.merge(self.previous)
         # ``last`` is a point-in-time census (set by the snapshot scan), not an
         # accumulating stream: only the current window's census is valid --

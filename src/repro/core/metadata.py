@@ -494,11 +494,37 @@ class MetadataServer:
                 out.append(victim)
         return out
 
-    def expire_replica(self, ident, texp: float) -> Optional[Tuple[str, str, str, int]]:
+    def expire_batch(
+        self, pops: List[Tuple[float, Tuple]]
+    ) -> List[Tuple[str, str, str, int]]:
+        """Process one drain round off ``self.expiry`` (the batched spine's
+        EXPIRE handler).  Guards and metadata mutation run per entry in pop
+        order -- later guards must see earlier drops -- but the round's
+        ledger charges are applied in one vectorized
+        :meth:`CostLedger.on_replica_drop_batch` call.  Returns the
+        (bucket, key, region, version) victims to physically DELETE, in pop
+        order."""
+        drops: List[Tuple[str, str, str, float, int]] = []
+        victims: List[Tuple[str, str, str, int]] = []
+        for texp, ident in pops:
+            victim = self.expire_replica(ident, texp, _drops=drops)
+            if victim is not None:
+                victims.append(victim)
+        if self.ledger is not None and drops:
+            self.ledger.on_replica_drop_batch(drops)
+        return victims
+
+    def expire_replica(
+        self, ident, texp: float, _drops: Optional[List] = None,
+    ) -> Optional[Tuple[str, str, str, int]]:
         """Process ONE expiry already popped off ``self.expiry`` (by
         :meth:`scan_expired` or by the event spine's EXPIRE handler).
         Returns the (bucket, key, region, version) to physically DELETE, or
-        None if the pop was stale / guarded (pinned, sole FP copy)."""
+        None if the pop was stale / guarded (pinned, sole FP copy).
+
+        ``_drops`` is the :meth:`expire_batch` charge-deferral hook: when
+        given, a drop appends ``(bucket, key, region, end, version)`` there
+        instead of charging the ledger immediately."""
         bucket, key, version, region = ident
         om = self.objects.get((bucket, key))
         vm = None
@@ -532,7 +558,9 @@ class MetadataServer:
                 return None
             del vm.replicas[region]
             m.unbind_index()
-            if self.ledger is not None:
+            if _drops is not None:
+                _drops.append((bucket, key, region, m.expire, vm.version))
+            elif self.ledger is not None:
                 self.ledger.on_replica_drop(bucket, key, region, m.expire,
                                             count_eviction=True,
                                             version=vm.version)

@@ -428,13 +428,19 @@ class SkyStorePolicy(Policy):
         warmup_min_samples: int = 32,
         u_perf_val_per_gb: float = 0.0,
         size_stratified: bool = False,
+        engine: str = "auto",
     ):
         super().__init__(cost)
         self.size_stratified = size_stratified
+        # ``engine`` selects the controller's TTL refresh implementation
+        # (repro.core.ttl_policy.TTL_ENGINES); plumbed through so whole-plane
+        # replays can pin kernel decisions == scalar-python decisions (see
+        # tests/test_kernel_plane_equivalence.py).
         self._ctl_kwargs = dict(
             refresh_period=refresh_period,
             warmup_min_samples=warmup_min_samples,
             u_perf_val_per_gb=u_perf_val_per_gb,
+            engine=engine,
         )
         self.ctl = self._mk()
 

@@ -312,20 +312,31 @@ def _drive_live_spine(store: VirtualStore, policy, trace: Trace,
     spine = EventSpine(trace.iter_requests(), store.meta.expiry,
                        scan_interval=scan_interval, epoch_len=policy.epoch,
                        horizon=horizon, outages=outages)
-    for sev in spine:
-        if sev.kind == EXPIRE:
-            store.expire_replica(sev.ident, sev.t)
-        elif sev.kind == DATA:
-            _dispatch_live(store, sev.request, sev.t, decisions)
-        elif sev.kind == TICK:
-            store.meta.expire_pending(sev.t)
-            policy.periodic(sev.t, store)
-        elif sev.kind == REGION_DOWN:
-            store.region_down(sev.region, sev.t)
-        elif sev.kind == REGION_UP:
-            store.region_up(sev.region, sev.t)
-        elif sev.kind == EPOCH:
-            _live_epoch(store, policy, sev.epoch, sev.t, epoch_sets)
+    # Batched consumption (engine.py "batched consumption" contract) --
+    # the same chunked loop Simulator.run drives, so both planes observe
+    # the identical scalar-equivalent event order.
+    expiry = store.meta.expiry
+    expire_round = store.expire_replicas
+    for batch in spine.iter_batches():
+        kind = batch.kind
+        if kind == DATA:
+            for req in batch.requests:
+                t = float(req.at)
+                p = expiry.peek()
+                if p is not None and p <= t:
+                    EventSpine.drain_due(expiry, t, expire_round)
+                _dispatch_live(store, req, t, decisions)
+        elif kind == EXPIRE:
+            expire_round(batch.pops)
+        elif kind == TICK:
+            store.meta.expire_pending(batch.t)
+            policy.periodic(batch.t, store)
+        elif kind == REGION_DOWN:
+            store.region_down(batch.region, batch.t)
+        elif kind == REGION_UP:
+            store.region_up(batch.region, batch.t)
+        elif kind == EPOCH:
+            _live_epoch(store, policy, batch.epoch, batch.t, epoch_sets)
     return decisions, epoch_sets
 
 
@@ -353,16 +364,20 @@ def run_live_plane(
 
 def live_replay_throughput(
     trace: Trace, cost: CostModel, policy_name: str = "skystore",
-    mode: str = "FB", scan_interval: float = DAY, **policy_kw,
+    mode: str = "FB", scan_interval: float = DAY,
+    outages: Optional[OutageSchedule] = None, **policy_kw,
 ) -> Dict[str, float]:
     """Time one live-plane replay; returns events/sec plus the expiry-index
     counters the benchmark smoke guards on (the events/sec floor is the
-    regression signal against O(objects) per-event work creeping back)."""
+    regression signal against O(objects) per-event work creeping back).
+    ``outages`` (falling back to ``trace.outages``) times the replay under a
+    §6.4 failure schedule -- the chaos-overhead benchmark."""
     store, ledger, policy, horizon = _make_live_plane(
         trace, cost, policy_name, mode, None, **policy_kw)
+    if outages is None:
+        outages = trace.outages
     t0 = time.perf_counter()
-    _drive_live_spine(store, policy, trace, scan_interval, horizon,
-                      trace.outages)
+    _drive_live_spine(store, policy, trace, scan_interval, horizon, outages)
     dt = time.perf_counter() - t0
     report = ledger.finalize(horizon, store.meta)
     n = len(trace.events)

@@ -102,6 +102,64 @@ def choose_ttl(
     return float(ttls[int(np.argmin(cost))])
 
 
+def batched_cost_curves(
+    hist: np.ndarray,          # [E, C] re-read bytes per cell
+    time_w: np.ndarray,        # [E, C] sum of gap*bytes per cell
+    last: np.ndarray,          # [E, C] paused-bytes census per cell
+    edges: np.ndarray,         # [C]    shared cell layout
+    first_remote: np.ndarray,  # [E]    initial-GET remote bytes
+    s: np.ndarray,             # [E]    $ / byte-second at each target
+    n: np.ndarray,             # [E]    $ / byte on each edge
+    include_censored_tail: bool = True,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized float64 ExpectedCost surfaces for E edge problems sharing
+    one cell layout: the batched form of :func:`expected_cost_curve`.
+
+    Returns ``(candidate_ttls [C+1], cost [E, C+1])``.  Row ``i`` is
+    bit-identical to ``expected_cost_curve`` on the same inputs:
+    ``np.cumsum(..., axis=1)`` accumulates each row in the same sequential
+    order as the 1-D scan, and every other term is elementwise -- so the
+    batched argmin IS the per-edge argmin, not an approximation of it.  This
+    is the production refresh path off-TPU; the float32 Pallas kernel
+    (:mod:`repro.kernels.ttl_scan`) is the same computation on accelerator
+    hardware, with this function as its exact oracle.
+    """
+    hist = np.asarray(hist, dtype=np.float64)
+    time_w = np.asarray(time_w, dtype=np.float64)
+    last = np.asarray(last, dtype=np.float64)
+    edges = np.asarray(edges, dtype=np.float64)
+    first_remote = np.asarray(first_remote, dtype=np.float64)
+    s = np.asarray(s, dtype=np.float64)[:, None]
+    n = np.asarray(n, dtype=np.float64)[:, None]
+
+    lower = np.concatenate([[0.0], edges[:-1]])
+    mid = 0.5 * (lower + edges)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        t_hat = np.where(hist > 0, time_w / np.maximum(hist, 1e-30), mid)
+
+    zcol = np.zeros((hist.shape[0], 1))
+    hit_cost_csum = np.concatenate(
+        [zcol, np.cumsum(hist * t_hat, axis=1)], axis=1) * s
+    hist_csum = np.concatenate([zcol, np.cumsum(hist, axis=1)], axis=1)
+    last_csum = np.concatenate([zcol, np.cumsum(last, axis=1)], axis=1)
+
+    ttls = np.concatenate([[0.0], edges])
+    miss_bytes = hist_csum[:, -1:] - hist_csum
+    tail_bytes = last_csum[:, -1:] - last_csum
+
+    cost = (
+        first_remote[:, None] * n
+        + hit_cost_csum
+        + miss_bytes * (n + ttls[None, :] * s)
+        + tail_bytes * ttls[None, :] * s
+    )
+    if include_censored_tail:
+        age_cost_csum = np.concatenate(
+            [zcol, np.cumsum(last * mid, axis=1)], axis=1) * s
+        cost = cost + age_cost_csum
+    return ttls, cost
+
+
 def choose_ttl_with_perf_value(
     h: AccessHistogram,
     storage_gb_month: float,
@@ -140,6 +198,21 @@ class EdgeTTL:
     expected_cost: float = np.nan
 
 
+#: TTL-selection engines the refresh loop can run on (see
+#: :meth:`AdaptiveTTLController._resolve_engine`):
+#:
+#:   numpy   batched float64 :func:`batched_cost_curves` -- bit-identical to
+#:           the per-edge scalar path, the off-TPU production default;
+#:   kernel  the Pallas float32 kernel via
+#:           :func:`repro.kernels.ops.ttl_scan_from_histograms` -- the
+#:           production engine on TPU hosts;
+#:   jax     the pure-jnp float32 oracle of the same batched path;
+#:   python  the legacy per-edge scalar loop (kept as the reference the
+#:           equivalence suite pins the batched engines against);
+#:   auto    kernel on TPU, numpy everywhere else.
+TTL_ENGINES = ("auto", "kernel", "jax", "numpy", "python")
+
+
 class AdaptiveTTLController:
     """Per-(bucket, target region) statistics -> per-edge TTLs (§3.3.1).
 
@@ -148,6 +221,13 @@ class AdaptiveTTLController:
     each incoming edge gets its own TTL because only N differs per edge.  The
     object-level TTL is then ``min`` over edges whose source currently holds a
     replica, with the eviction-safety filter applied by the placement layer.
+
+    The refresh loop is *batched* (§6.7.3: 10 regions x 1000 buckets = 100k
+    edge problems per cycle): all incoming edges of one (bucket, dst) pair are
+    solved in a single call to the selected ``engine`` instead of one Python
+    argmin per edge.  TTLs are always resolved by argmin *index* against the
+    float64 candidate grid, so engine choice never leaks float32 TTL values
+    into the planes.
     """
 
     def __init__(
@@ -158,6 +238,7 @@ class AdaptiveTTLController:
         u_perf_val_per_gb: float = 0.0,
         edges: Optional[np.ndarray] = None,
         rotate_multiple_of_t_even: float = 2.0,
+        engine: str = "auto",
     ) -> None:
         self.cost = cost
         self.refresh_period = refresh_period
@@ -168,6 +249,10 @@ class AdaptiveTTLController:
         self.edge_ttls: Dict[Tuple[str, str, str], EdgeTTL] = {}
         self.last_refresh: Dict[Tuple[str, str], float] = {}
         self.rotate_multiple = rotate_multiple_of_t_even
+        if engine not in TTL_ENGINES:
+            raise ValueError(f"unknown TTL engine {engine!r}; have {TTL_ENGINES}")
+        self.engine = engine
+        self._engine_resolved: Optional[str] = None
 
     # -- statistics ingestion ------------------------------------------------
     def hist_for(self, bucket: str, region: str) -> RollingHistogram:
@@ -177,9 +262,10 @@ class AdaptiveTTLController:
         return self.hists[key]
 
     def record_gap(self, bucket: str, region: str, dt: float, size: float) -> None:
-        self.hist_for(bucket, region).current.add_gaps(
-            np.asarray([dt]), np.asarray([size])
-        )
+        # Queued, not applied: the per-sample numpy machinery is the live
+        # plane's ingestion hot spot.  RollingHistogram flushes the queue in
+        # one vectorized (bit-identical) add_gaps before any estimation read.
+        self.hist_for(bucket, region).queue_gap(float(dt), float(size))
 
     def record_first_read(self, bucket: str, region: str, size: float, remote: bool) -> None:
         self.hist_for(bucket, region).current.add_first_read(size, remote)
@@ -215,6 +301,24 @@ class AdaptiveTTLController:
         return float(min(ttls))
 
     # -- refresh loop ----------------------------------------------------------
+    def _resolve_engine(self) -> str:
+        """Pin the ``auto`` engine choice once per controller: the Pallas
+        kernel on TPU hosts, the batched float64 numpy path everywhere else
+        (per-refresh jit dispatch overhead dwarfs the arithmetic at replay
+        edge counts, and float64 keeps decisions bit-identical to the
+        scalar reference)."""
+        if self._engine_resolved is None:
+            eng = self.engine
+            if eng == "auto":
+                try:
+                    import jax
+                    eng = ("kernel" if jax.default_backend() == "tpu"
+                           else "numpy")
+                except Exception:
+                    eng = "numpy"
+            self._engine_resolved = eng
+        return self._engine_resolved
+
     def _maybe_refresh(self, bucket: str, dst: str, now: float) -> None:
         key = (bucket, dst)
         last = self.last_refresh.get(key, -np.inf)
@@ -226,18 +330,30 @@ class AdaptiveTTLController:
         if merged.n_samples < self.warmup_min_samples:
             return
         s = self.cost.storage_price(dst)
-        for src in self.cost.region_names():
-            if src == dst:
-                continue
-            n = self.cost.egress_price(src, dst)
-            if self.u_perf_val_per_gb > 0:
-                ttl = choose_ttl_with_perf_value(merged, s, n, self.u_perf_val_per_gb)
-            else:
-                ttl = choose_ttl(merged, s, n)
-            ttls_c, cost_c = expected_cost_curve(merged, s, n)
-            self.edge_ttls[(bucket, src, dst)] = EdgeTTL(
-                ttl, now, float(cost_c.min())
-            )
+        srcs = [src for src in self.cost.region_names() if src != dst]
+        engine = self._resolve_engine()
+        if self.u_perf_val_per_gb > 0 or engine == "python":
+            # Scalar reference path: the §3.3.2 perf-value lift walks the
+            # per-edge curve beyond the argmin, so it stays on the scalar
+            # implementation; engine="python" keeps the legacy loop
+            # selectable as the equivalence oracle.
+            for src in srcs:
+                n = self.cost.egress_price(src, dst)
+                if self.u_perf_val_per_gb > 0:
+                    ttl = choose_ttl_with_perf_value(
+                        merged, s, n, self.u_perf_val_per_gb)
+                else:
+                    ttl = choose_ttl(merged, s, n)
+                _ttls_c, cost_c = expected_cost_curve(merged, s, n)
+                self.edge_ttls[(bucket, src, dst)] = EdgeTTL(
+                    ttl, now, float(cost_c.min())
+                )
+        else:
+            ttls, costs = self._refresh_batched(merged, dst, srcs, engine)
+            for src, ttl, c in zip(srcs, ttls, costs):
+                self.edge_ttls[(bucket, src, dst)] = EdgeTTL(
+                    float(ttl), now, float(c)
+                )
         # Rotate the collection window once it is comfortably longer than the
         # largest T_even of any incoming edge (§3.2.3 guidance).
         t_even_max = max(
@@ -247,3 +363,34 @@ class AdaptiveTTLController:
         )
         if now - roll.window_start > self.rotate_multiple * t_even_max:
             roll.rotate(now)
+
+    def _refresh_batched(
+        self, merged: AccessHistogram, dst: str, srcs: list, engine: str,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Solve every incoming edge of (bucket, dst) in one batched call.
+
+        All rows share the merged target-side histogram; only the per-edge
+        egress price N varies.  Returns ``(ttl_seconds [E], best_cost [E])``
+        with TTLs off the float64 candidate grid on every engine.
+        """
+        s_gbmo = self.cost.storage_price(dst)
+        n_gb = [self.cost.egress_price(src, dst) for src in srcs]
+        if engine == "numpy":
+            e_dim = len(srcs)
+            s = np.asarray([s_gbmo / GB / SECONDS_PER_MONTH] * e_dim)
+            n = np.asarray([x / GB for x in n_gb])
+            hist = np.broadcast_to(merged.hist, (e_dim, merged.hist.shape[0]))
+            time_w = np.broadcast_to(merged.time_weight, hist.shape)
+            last = np.broadcast_to(merged.last, hist.shape)
+            first = np.full(e_dim, merged.first_read_remote_bytes)
+            ttls, cost = batched_cost_curves(
+                hist, time_w, last, merged.edges, first, s, n)
+            idx = np.argmin(cost, axis=1)
+            return ttls[idx], cost[np.arange(e_dim), idx]
+        # kernel / jax: the float32 batched scan with float64 candidate
+        # resolution (repro.kernels.ops canonicalizes argmin ties).
+        from repro.kernels.ops import ttl_scan_from_histograms
+        ttls, costs, _surface = ttl_scan_from_histograms(
+            [merged] * len(srcs), self.cost,
+            [(src, dst) for src in srcs], engine=engine)
+        return np.asarray(ttls), np.asarray(costs)

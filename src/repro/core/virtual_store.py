@@ -963,6 +963,17 @@ class VirtualStore:
         self.backends[region].delete(bucket, self._pkey(key, version))
         return True
 
+    def expire_replicas(self, pops) -> int:
+        """EXPIRE-round handler for the batched spine
+        (:meth:`EventSpine.iter_batches`): one drain round through
+        :meth:`MetadataServer.expire_batch` (ledger charges vectorized),
+        then the physical DELETEs in victim order.  Returns the number of
+        replicas dropped."""
+        victims = self.meta.expire_batch(pops)
+        for bucket, key, region, version in victims:
+            self.backends[region].delete(bucket, self._pkey(key, version))
+        return len(victims)
+
     def backup_metadata(self, bucket: str, region: str) -> None:
         """Checkpoint the control plane *into* the object layer (§4.5)."""
         blob = self.meta.backup()

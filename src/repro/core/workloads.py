@@ -331,6 +331,23 @@ WORKLOAD_TIERS: Dict[str, Dict[str, dict]] = {
         "scan_backup": dict(n_objects=10_000, n_random_reads=40_000,
                             n_buckets=8, duration=14 * DAY),
     },
+    # The §6.7.3-scale tier: >= 1M events over >= 100k objects.  Replays on
+    # BOTH planes with zero divergence (the env-gated xlarge differential in
+    # tests/test_replay_differential.py); BENCH_7.json carries its measured
+    # events/sec.  The batched spine (engine.iter_batches) is what makes a
+    # 1M-event live replay tractable.
+    "xlarge": {
+        "zipfian": dict(n_objects=100_000, n_requests=1_000_000,
+                        n_buckets=16, duration=90 * DAY),
+        "hotspot_shift": dict(n_objects=100_000, n_requests=1_000_000,
+                              n_phases=12, n_buckets=16, duration=90 * DAY),
+        "diurnal": dict(n_objects=100_000, n_requests=1_000_000,
+                        n_buckets=16, duration=90 * DAY),
+        "write_heavy": dict(n_objects=100_000, n_requests=1_000_000,
+                            n_buckets=16, duration=90 * DAY),
+        "scan_backup": dict(n_objects=100_000, n_random_reads=400_000,
+                            n_buckets=16, duration=30 * DAY),
+    },
 }
 
 

@@ -62,16 +62,61 @@ def ttl_scan(
     return ttls[idx], jnp.take_along_axis(full, idx[:, None], 1)[:, 0], full
 
 
-def ttl_scan_from_histograms(histograms, cost_model, targets, use_kernel=True):
-    """Convenience: run the batched scan for a list of (bucket, src, dst)
-    problems built from :class:`repro.core.histogram.AccessHistogram` objects.
+#: Relative band for canonicalizing float32 argmin ties.  Exact cost-tie
+#: plateaus exist in real surfaces (zero misses and zero censored tail beyond
+#: a cell make consecutive candidates *exactly* equal in float64); float32
+#: rounding wobble can then move a plain argmin off the plateau start.  Any
+#: band in 2**-22 .. 2**-18 recovers the float64 plateau-start index on the
+#: full replay-harvested corpus (see tests/test_kernel_plane_equivalence.py);
+#: 2**-20 sits in the middle of that plateau of valid bands.
+TIE_BAND = 2.0 ** -20
+
+
+def _canonical_argmin(surface: np.ndarray) -> np.ndarray:
+    """First index within ``TIE_BAND`` of each row minimum.
+
+    This is the decision rule both float32 engines share so that the chosen
+    *index* -- and therefore the float64 candidate TTL it maps to -- matches
+    the pure-float64 ``choose_ttl`` argmin even on exact-tie plateaus.
+    """
+    surf = np.asarray(surface, dtype=np.float64)
+    mn = surf.min(axis=1, keepdims=True)
+    return np.argmax(surf <= mn * (1.0 + TIE_BAND), axis=1)
+
+
+def ttl_scan_from_histograms(
+    histograms, cost_model, targets,
+    use_kernel: bool = True,
+    engine: str | None = None,
+    interpret: bool | None = None,
+):
+    """Batched TTL selection for problems built from
+    :class:`repro.core.histogram.AccessHistogram` objects.
 
     ``histograms`` -- list of AccessHistogram (one per problem, target-side);
-    ``targets``    -- list of (src_region, dst_region) edges aligned with it.
+    ``targets``    -- list of (src_region, dst_region) edges aligned with it;
+    ``engine``     -- "kernel" (Pallas) or "jax" (jnp oracle); defaults from
+                      ``use_kernel`` for backward compatibility.
+
+    Returns ``(best_ttl [E], best_cost [E], cost_surface [E, C+1])`` as
+    float64 numpy arrays.  TTLs are resolved by canonical argmin *index*
+    against the float64 candidate grid ``[0, edges...]``, so the returned TTL
+    values are exact candidate boundaries, never float32 roundings of them.
+
+    Raises ``ValueError`` if the histograms do not share one cell layout
+    (mirroring :meth:`AccessHistogram.merge`): a silent mismatch would price
+    every row against the wrong cell boundaries.
     """
     from repro.core.costmodel import GB, SECONDS_PER_MONTH
 
+    if engine is None:
+        engine = "kernel" if use_kernel else "jax"
+    if engine not in ("kernel", "jax"):
+        raise ValueError(f"unknown ttl_scan engine {engine!r}")
     edges = histograms[0].edges
+    for h in histograms[1:]:
+        if h.edges.shape != edges.shape or not np.allclose(h.edges, edges):
+            raise ValueError("histograms with different cell layouts")
     hist = np.stack([h.hist for h in histograms])
     time_w = np.stack([h.time_weight for h in histograms])
     last = np.stack([h.last for h in histograms])
@@ -83,7 +128,14 @@ def ttl_scan_from_histograms(histograms, cost_model, targets, use_kernel=True):
     n = np.asarray([
         cost_model.egress_price(src, dst) / GB for (src, dst) in targets
     ])
-    return ttl_scan(hist, time_w, last, edges, s, n, first, use_kernel=use_kernel)
+    _ttl32, _cost32, surface = ttl_scan(
+        hist, time_w, last, edges, s, n, first,
+        use_kernel=(engine == "kernel"), interpret=interpret,
+    )
+    surface = np.asarray(surface, dtype=np.float64)
+    idx = _canonical_argmin(surface)
+    candidates = np.concatenate([[0.0], np.asarray(edges, dtype=np.float64)])
+    return candidates[idx], surface[np.arange(idx.shape[0]), idx], surface
 
 
 # ---------------------------------------------------------------------------

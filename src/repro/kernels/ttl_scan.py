@@ -11,14 +11,14 @@ TPU adaptation (DESIGN.md §5): we lay the histograms out as (edges x cells)
 tiles. Each grid step loads a (BLOCK_E, C_PAD) tile of the four per-cell arrays
 into VMEM, computes four running sums along the cell axis in fp32, forms the
 four cost terms, and writes the (BLOCK_E, C_PAD) cost surface back to HBM.
-C_PAD rounds 800 up to 1024 lanes (8 x 128); block height defaults to 256
-sublanes, so the working set is
+C_PAD rounds 800 up to the next multiple of 128 lanes -- 896 (7 x 128); block
+height defaults to 256 sublanes, so the working set is
 
-    5 arrays x 256 x 1024 x 4 B = 5.2 MB  << 16 MB VMEM.
+    5 arrays x 256 x 896 x 4 B ~= 4.6 MB  << 16 MB VMEM.
 
 The kernel avoids `jnp.cumsum` (which lowers to a serial loop on some
-backends) in favour of a log2(C) Hillis-Steele shift-add scan: 10 shifted adds
-over the lane axis, each a full-width VPU op.
+backends) in favour of a ceil(log2(C)) Hillis-Steele shift-add scan: 10
+shifted adds over the lane axis at C_PAD=896, each a full-width VPU op.
 
 Oracle: :func:`repro.kernels.ref.ttl_cost_ref`; jit wrapper + argmin epilogue:
 :func:`repro.kernels.ops.ttl_scan`.
@@ -41,7 +41,9 @@ LANES = 128
 
 
 def _inclusive_scan(x: jax.Array) -> jax.Array:
-    """Hillis-Steele inclusive prefix sum along the last axis (power-of-2 len)."""
+    """Hillis-Steele inclusive prefix sum along the last axis.  Works for any
+    length (the shift-add loop runs ceil(log2(n)) rounds; no power-of-2
+    requirement -- see the non-power-of-2 regression in tests/test_kernels.py)."""
     n = x.shape[-1]
     shift = 1
     while shift < n:

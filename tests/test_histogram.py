@@ -55,3 +55,53 @@ def test_decay_ages_old_statistics():
     h.add_gaps(np.array([10.0]), np.array([4.0]))
     h.decay(0.5)
     assert h.total_reread_bytes == pytest.approx(2.0)
+
+
+def test_merged_returns_defensive_copies_single_window():
+    """Mutating merged()'s arrays (decay() during TTL estimation does) must
+    not corrupt the live collection window -- single-window branch."""
+    roll = RollingHistogram()
+    roll.current.add_gaps(np.array([10.0]), np.array([4.0]))
+    m = roll.merged()
+    m.decay(0.5)
+    m.hist[:] = -1.0
+    m.time_weight[:] = -1.0
+    m.last[:] = -1.0
+    assert roll.current.total_reread_bytes == pytest.approx(4.0)
+    assert roll.merged().total_reread_bytes == pytest.approx(4.0)
+    assert np.all(roll.current.last == 0.0)
+
+
+def test_merged_returns_defensive_copies_two_windows():
+    """Same contract on the merge branch: the snapshot's ``last`` census is
+    copied from the current window, not aliased into it."""
+    roll = RollingHistogram()
+    roll.current.add_gaps(np.array([10.0]), np.array([1.0]))
+    roll.rotate(now=1000.0)
+    roll.current.add_gaps(np.array([20.0]), np.array([2.0]))
+    roll.current.add_last(np.array([50.0]), np.array([3.0]))
+    m = roll.merged()
+    m.hist[:] = -1.0
+    m.last[:] = -1.0
+    assert roll.current.total_reread_bytes == pytest.approx(2.0)
+    assert roll.previous.total_reread_bytes == pytest.approx(1.0)
+    assert roll.current.total_last_bytes == pytest.approx(3.0)
+    assert roll.merged().total_reread_bytes == pytest.approx(3.0)
+    assert roll.merged().total_last_bytes == pytest.approx(3.0)
+
+
+def test_queue_gap_flush_bit_identical_to_direct_adds():
+    """The buffered ingestion path (queue_gap -> flush) must land exactly
+    where per-sample add_gaps would: np.add.at accumulates sequentially."""
+    rng = np.random.default_rng(3)
+    dts = rng.uniform(0.5, 1e7, 200)
+    szs = rng.gamma(0.5, 1e8, 200)
+    direct = AccessHistogram.empty()
+    for dt, sz in zip(dts, szs):
+        direct.add_gaps(np.array([dt]), np.array([sz]))
+    roll = RollingHistogram()
+    for dt, sz in zip(dts, szs):
+        roll.queue_gap(float(dt), float(sz))
+    m = roll.merged()
+    np.testing.assert_array_equal(m.hist, direct.hist)
+    np.testing.assert_array_equal(m.time_weight, direct.time_weight)

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.core.histogram import cell_edges
 from repro.kernels import flash_attention, ttl_scan
 from repro.kernels import ref
-from repro.kernels.ttl_scan import ttl_cost_surface
+from repro.kernels.ttl_scan import _inclusive_scan, ttl_cost_surface
 
 
 def _hist_problem(e_dim, c_dim, seed):
@@ -134,3 +134,32 @@ def test_rwkv6_ref_matches_naive_loop():
         s = w[:, :, t, :, None] * s + kv
     np.testing.assert_allclose(np.asarray(out), outs, rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(s_fin), s, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 7, 100, 123, 800, 896, 1024])
+def test_inclusive_scan_any_length(n):
+    """The Hillis-Steele scan has no power-of-2 requirement (its docstring
+    says so): pin cumsum equivalence across awkward lengths."""
+    rng = np.random.default_rng(n)
+    # Positive samples: cancellation-free, so float32 association error
+    # stays ~eps * log2(n) relative and a tight rtol is meaningful.
+    x = rng.uniform(0.1, 2.0, size=(3, n)).astype(np.float32)
+    out = _inclusive_scan(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.cumsum(x.astype(np.float64), axis=1),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("c_dim", [123, 257, 800, 900])
+def test_ttl_scan_non_pow2_c_vs_ref(c_dim):
+    """Non-power-of-2 candidate counts through the *kernel* path (padding to
+    the 128-lane boundary + in-kernel scan) must match ref.ttl_cost_ref on
+    the unpadded columns -- the regression the _inclusive_scan docstring
+    points at."""
+    prob = _hist_problem(9, c_dim, seed=c_dim)
+    surface_k = ttl_cost_surface(*[jnp.asarray(x) for x in prob],
+                                 interpret=True)
+    surface_r = ref.ttl_cost_ref(*[jnp.asarray(x) for x in prob])
+    assert surface_k.shape == (9, c_dim)
+    np.testing.assert_allclose(np.asarray(surface_k), np.asarray(surface_r),
+                               rtol=2e-5, atol=1e-4)
