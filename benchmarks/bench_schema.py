@@ -1,11 +1,17 @@
-"""Schema diff for the committed BENCH artifact (``BENCH_7.json``).
+"""Schema + perf-floor diff for the committed BENCH artifact
+(``BENCH_8.json``).
 
 CI regenerates the artifact at smoke scale (``--smoke --json-out``) on every
 push; the *values* are machine-dependent throwaways, but the *shape* is the
 contract -- every dotted key path present in the committed artifact must be
 present in the regenerated one and vice versa (so a benchmark section can't
 silently vanish, and new sections can't land without refreshing the
-committed copy).  Two deliberate exemptions:
+committed copy).  One value IS compared: the committed artifact's
+``floors.smoke_replay_events_per_sec`` gates the regenerated
+``replay.replay_events_per_sec.live`` -- the perf-regression tripwire for
+the vectorized routing plane (the floor is set conservatively under CI
+hardware; see ``benchmarks.run.SMOKE_REPLAY_EVENTS_PER_SEC_FLOOR``).
+Two deliberate exemptions:
 
 * ``failures`` -- a list of strings, length varies by run (the smoke gate
   handles its content; here only the key's existence matters);
@@ -15,7 +21,7 @@ committed copy).  Two deliberate exemptions:
 
 Usage::
 
-    PYTHONPATH=src python -m benchmarks.bench_schema BENCH_7.json /tmp/smoke.json
+    PYTHONPATH=src python -m benchmarks.bench_schema BENCH_8.json /tmp/smoke.json
 """
 
 from __future__ import annotations
@@ -73,7 +79,30 @@ def diff_schemas(committed: dict, regenerated: dict) -> list:
                         f"{missing}")
     for extra in sorted(b - a):
         problems.append(f"key path absent from committed artifact "
-                        f"(refresh BENCH_7.json): {extra}")
+                        f"(refresh BENCH_8.json): {extra}")
+    return problems
+
+
+def check_floors(committed: dict, regenerated: dict) -> list:
+    """The perf gate: the regenerated smoke run's live replay rate must
+    clear the floor pinned in the *committed* artifact, so the gate
+    tightens/loosens only through a reviewed refresh of ``BENCH_8.json``,
+    never through a drive-by edit of the regenerating code."""
+    problems = []
+    floor = committed.get("floors", {}).get("smoke_replay_events_per_sec")
+    live = (regenerated.get("replay", {})
+            .get("replay_events_per_sec", {}).get("live"))
+    if floor is None:
+        problems.append("committed artifact carries no "
+                        "floors.smoke_replay_events_per_sec")
+    elif live is None:
+        problems.append("regenerated artifact carries no "
+                        "replay.replay_events_per_sec.live")
+    elif live < floor:
+        problems.append(
+            f"perf floor: regenerated replay_events_per_sec.live "
+            f"{live:.0f} < committed floor {floor} (vectorized routing "
+            f"fast path lost, or O(objects) per-event work returned?)")
     return problems
 
 
@@ -91,12 +120,14 @@ def main(argv: list) -> int:
     with open(argv[2]) as f:
         regenerated = json.load(f)
     problems = diff_schemas(committed, regenerated)
+    problems += check_floors(committed, regenerated)
     if problems:
         for p in problems:
             print("BENCH SCHEMA FAIL:", p)
         return 1
     print(f"bench schema OK: {argv[1]} and {argv[2]} agree on "
-          f"{len(key_paths(committed))} key paths")
+          f"{len(key_paths(committed))} key paths; live replay floor "
+          f"cleared")
     return 0
 
 

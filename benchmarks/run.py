@@ -6,10 +6,12 @@ followed by the full human-readable tables.
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --quick    # small sizes
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI canary (~60 s)
-    PYTHONPATH=src python -m benchmarks.run --artifact --json-out BENCH_7.json
+    PYTHONPATH=src python -m benchmarks.run --artifact --json-out BENCH_8.json
 
 ``--smoke --json-out X`` writes the smoke-scale BENCH artifact (CI
-regenerates it and schema-diffs against the committed ``BENCH_7.json``);
+regenerates it, schema-diffs it against the committed ``BENCH_8.json``,
+and gates the regenerated ``replay_events_per_sec.live`` against the
+committed floor);
 ``--artifact`` runs the full-scale version, including the 1M-event xlarge
 differential, to produce the committed artifact itself.
 """
@@ -24,31 +26,42 @@ from benchmarks import kernel_bench, paper_tables
 
 
 #: CI floor for ``replay_events_per_sec`` on the (reduced-size) large tier.
-#: The batched spine (engine.iter_batches: chunked DATA runs, one drain
-#: round per EXPIRE batch, vectorized ledger charges) sustains ~10-12k
-#: events/sec on the live plane on developer machines; the per-event scalar
-#: spine managed ~4-8k and the retired ``full_scan_expired`` baseline a few
-#: hundred.  The floor is pinned at 2x the old 1500 ev/s gate: any change
-#: that drops the live plane back to per-event Python dispatch overhead
-#: trips it.
-SMOKE_REPLAY_EVENTS_PER_SEC_FLOOR = 3000
+#: With the array-backed routing plane (repro.core.routing: one vectorized
+#: argmin routes a whole DATA chunk's GETs, hinted dispatch skips the
+#: per-GET locate, chunk egress/op charges arrive as precomputed vectors)
+#: the live plane sustains ~15-20k events/sec on developer machines, up
+#: from ~10-12k on the batched spine alone and ~4-8k per-event scalar.
+#: The floor doubles the old 3000 ev/s gate: losing the vectorized routing
+#: fast path (or O(objects) per-event work creeping back) trips it.
+SMOKE_REPLAY_EVENTS_PER_SEC_FLOOR = 6000
 
-#: Version stamp of the committed perf artifact (``BENCH_7.json``).  CI
+#: Version stamp of the committed perf artifact (``BENCH_8.json``).  CI
 #: regenerates the artifact at smoke scale via ``--smoke --json-out`` and
-#: fails if the committed copy is missing or its key schema drifted
-#: (``benchmarks.bench_schema``); values are machine-dependent and only the
-#: committed full-scale run's numbers are meaningful across checkouts.
-BENCH_VERSION = 7
+#: fails if the committed copy is missing, its key schema drifted, or the
+#: regenerated live replay rate fell under the committed floor
+#: (``benchmarks.bench_schema``); other values are machine-dependent and
+#: only the committed full-scale run's numbers are meaningful across
+#: checkouts.
+BENCH_VERSION = 8
 
 
 def _emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
-def replay_throughput(tier: str = "large", **tier_overrides) -> dict:
+def replay_throughput(tier: str = "large", repeats: int = 3,
+                      **tier_overrides) -> dict:
     """Replay-throughput benchmark on a named workload tier (``large`` =
     >= 100k events / >= 10k objects by default): events/sec of both planes
-    on the batched event spine."""
+    on the batched event spine.
+
+    "live" is the default engine (auto -> the array-backed routing
+    matrix); "live_python" replays the same trace through the scalar
+    choose_get_source reference path, so the artifact carries its own
+    before/after evidence for the vectorized dispatch.  Every leg is timed
+    best-of-``repeats`` after one shared warmup replay -- same matched-run
+    discipline as :func:`chaos_matrix`; a one-shot comparison hands the
+    first leg the process's cold-start costs and can invert the ranking."""
     import time as _time
 
     from repro.core.costmodel import pick_regions
@@ -59,27 +72,48 @@ def replay_throughput(tier: str = "large", **tier_overrides) -> dict:
     tr = make_workload("zipfian", cat.region_names(), seed=7, tier=tier,
                        **tier_overrides)
     out = {"tier": tier, "events": len(tr.events),
-           "objects": tr.stats()["objects"]}
+           "objects": tr.stats()["objects"], "repeats": repeats}
 
-    t0 = _time.perf_counter()
-    run_sim_plane(tr, cat, "skystore")
-    dt = _time.perf_counter() - t0
-
-    live = live_replay_throughput(tr, cat, "skystore")
-    out["replay_events_per_sec"] = {
-        "sim": len(tr.events) / dt,
-        "live": live["events_per_sec"],
-    }
+    live = live_replay_throughput(tr, cat, "skystore")      # shared warmup
     out["expiry_pops"] = live["expiry_pops"]
+
+    sim_eps = 0.0
+    for _ in range(repeats):
+        t0 = _time.perf_counter()
+        run_sim_plane(tr, cat, "skystore")
+        sim_eps = max(sim_eps,
+                      len(tr.events) / (_time.perf_counter() - t0))
+    out["replay_events_per_sec"] = {
+        "sim": sim_eps,
+        "live": max(
+            live_replay_throughput(tr, cat, "skystore")["events_per_sec"]
+            for _ in range(repeats)),
+        "live_python": max(
+            live_replay_throughput(tr, cat, "skystore",
+                                   routing="python")["events_per_sec"]
+            for _ in range(repeats)),
+    }
     return out
 
 
-def chaos_matrix(tier: str = "large", **tier_overrides) -> dict:
+def chaos_matrix(tier: str = "large", repeats: int = 3,
+                 **tier_overrides) -> dict:
     """Failover overhead at scale: zipfian@tier under the ``rolling``
     outage profile (every region goes dark once, in turn), differentially
     verified, then timed against the outage-free baseline.
     ``overhead_pct`` is the live plane's slowdown from failover routing,
-    deferred §4.4 syncs, and the reachable-copy expiry guards."""
+    deferred §4.4 syncs, and the reachable-copy expiry guards.
+
+    Both legs are timed best-of-``repeats`` (min wall clock -> max
+    events/sec) after one shared warmup replay: the earlier one-shot
+    timing ran the baseline leg cold (first numpy/jax touches, allocator
+    growth) and the chaos leg warm, inflating the comparison by up to
+    ~10%.  Note a *mildly* negative overhead on small runs is real, not
+    skew: outages suppress work -- 503'd GETs fail fast, and downed
+    regions receive no replications (interleaved counter check: rolling
+    outages at smoke scale drop ~18% of replications and ~3% of served
+    GETs) -- so the failover-routing cost only dominates once the outage
+    windows are a small fraction of a long trace."""
     from repro.core.costmodel import pick_regions
     from repro.core.replay import live_replay_throughput, replay_differential
     from repro.core.workloads import make_outage_schedule, make_workload
@@ -89,14 +123,19 @@ def chaos_matrix(tier: str = "large", **tier_overrides) -> dict:
                        **tier_overrides)
     sched = make_outage_schedule("rolling", cat.region_names(), tr.duration,
                                  seed=7)
-    base = live_replay_throughput(tr, cat, "skystore")
-    chaos = live_replay_throughput(tr, cat, "skystore", outages=sched)
+    live_replay_throughput(tr, cat, "skystore")         # shared warmup
+    base_eps = max(
+        live_replay_throughput(tr, cat, "skystore")["events_per_sec"]
+        for _ in range(repeats))
+    chaos_eps = max(
+        live_replay_throughput(tr, cat, "skystore",
+                               outages=sched)["events_per_sec"]
+        for _ in range(repeats))
     diff = replay_differential(tr, cat, "skystore", outages=sched,
                                workload=f"zipfian@{tier}", outage="rolling")
-    base_eps = base["events_per_sec"]
-    chaos_eps = chaos["events_per_sec"]
     return {
         "tier": tier, "schedule": "rolling", "events": len(tr.events),
+        "repeats": repeats,
         "baseline_events_per_sec": base_eps,
         "chaos_events_per_sec": chaos_eps,
         "overhead_pct": (100.0 * (base_eps / chaos_eps - 1.0)
@@ -182,10 +221,12 @@ def bench_artifact(scale: str = "smoke") -> dict:
     out["kernel"] = {
         "edges_per_refresh": kb["edges_per_refresh"],
         "jnp_oracle_us": kb["jnp_oracle"],
-        "pallas_interpret_us": kb["pallas_interpret"],
+        "pallas_us": kb["pallas"],
+        "compiled": kb["compiled"],
+        "skip_reason": kb["skip_reason"],
     }
     _emit(f"{tag}kernel_ttl_scan", (time.perf_counter() - t0) * 1e6,
-          f"edges={kb['edges_per_refresh']}")
+          f"edges={kb['edges_per_refresh']};compiled={kb['compiled']}")
 
     # Chaos overhead: rolling outages over the large tier.
     t0 = time.perf_counter()
@@ -365,8 +406,9 @@ def main() -> None:
 
     kb = kernel_bench.ttl_scan_bench(e_dim=256 if args.quick else 1024)
     results["ttl_scan"] = kb
-    _emit("kernel_ttl_scan_pallas", kb["pallas_interpret"],
-          f"oracle_us={kb['jnp_oracle']:.0f};edges={kb['edges_per_refresh']}")
+    _emit("kernel_ttl_scan_pallas", kb["pallas"],
+          f"oracle_us={kb['jnp_oracle']:.0f};edges={kb['edges_per_refresh']};"
+          f"compiled={kb['compiled']}")
 
     sb = kernel_bench.simulator_bench()
     results["simulator"] = sb

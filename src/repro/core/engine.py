@@ -101,6 +101,13 @@ class SpineBatch:
     epoch: int = -1                              # EPOCH: new epoch index
     region: Optional[str] = None                 # REGION_DOWN / REGION_UP
 
+    def gets(self) -> List:
+        """The chunk's GET requests, in event order -- the slice both
+        planes hand to ``RoutingMatrix.route_chunk`` for vectorized
+        routing (exact-type match: traces never subclass request types)."""
+        from .api import GetRequest
+        return [r for r in self.requests if type(r) is GetRequest]
+
 
 @dataclasses.dataclass(frozen=True)
 class OutageWindow:

@@ -188,3 +188,13 @@ class KeyInterner:
             oid = self.BASE + len(self._ids)
             self._ids[key] = oid
         return oid
+
+    def peek(self, key: str) -> Optional[int]:
+        """Non-mutating :meth:`intern`: the id ``key`` already maps to, or
+        ``None`` for a non-numeric key never interned.  No id is allocated
+        -- callers that look ahead (e.g. routing-hint preparation over a
+        chunk of future requests) use this so they cannot disturb the
+        first-use allocation order both planes' dense ids depend on."""
+        if key.isdigit():
+            return int(key)
+        return self._ids.get(key)

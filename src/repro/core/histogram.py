@@ -164,6 +164,24 @@ class RollingHistogram:
         self._pending_dt.append(dt)
         self._pending_sz.append(size)
 
+    def queue_gaps(self, dts, sizes) -> None:
+        """Buffer a whole chunk of gap samples at once.
+
+        The replay planes deliberately do NOT route their hot path through
+        this: a TTL refresh can fire mid-chunk (``merged()`` flushes the
+        queue), so deferring ingestion to chunk boundaries would let a
+        refresh read a histogram missing the chunk's earlier samples and
+        change TTL decisions.  Per-event ``queue_gap`` keeps the queue
+        exactly as long as the scalar path would have it at every possible
+        flush point.  This entry exists for offline/batch producers (trace
+        preprocessing, synthetic workload seeding) that know no estimation
+        read can interleave; the flushed result is bit-identical to the
+        equivalent sequence of :meth:`queue_gap` calls because ``add_gaps``
+        applies pending samples with ``np.add.at`` in queue order either
+        way."""
+        self._pending_dt.extend(float(x) for x in dts)
+        self._pending_sz.extend(float(x) for x in sizes)
+
     def flush(self) -> None:
         """Apply queued gap samples to the current window, vectorized."""
         if self._pending_dt:

@@ -258,6 +258,18 @@ class CostLedger:
         if self.charge_ops and region is not None:
             self.report.ops += self.cost.op_cost(region, op)
 
+    # Precomputed-value variants: the routing matrix's route_chunk evaluates
+    # a whole DATA chunk's GET/egress charges as numpy vectors whose elements
+    # mirror transfer_cost/op_cost term for term (bit-identical floats); the
+    # consumer accumulates them here one event at a time, in event order, so
+    # the report's float trajectory matches the scalar calls exactly.
+    def charge_transfer_value(self, value: float) -> None:
+        self.report.network += value
+
+    def charge_op_value(self, value: float) -> None:
+        if self.charge_ops:
+            self.report.ops += value
+
     # -- counters ------------------------------------------------------------
     def count_get(self, hit: bool) -> None:
         self.report.n_get += 1

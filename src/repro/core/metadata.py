@@ -28,6 +28,7 @@ from .api import ApiError, choose_get_source, resolve_put_placement
 from .costmodel import CostModel
 from .expiry import ExpiryIndex, KeyInterner
 from .ledger import CostLedger
+from .routing import RoutingMatrix, resolve_routing_engine
 from .ttl_policy import AdaptiveTTLController
 
 PENDING, COMMITTED = "pending", "committed"
@@ -44,7 +45,8 @@ class ReplicaMeta:
     generation token)."""
 
     __slots__ = ("region", "status", "created_at", "_last_access", "_ttl",
-                 "_pinned", "etag", "size", "_index", "_ident", "_order")
+                 "_pinned", "etag", "size", "_index", "_ident", "_order",
+                 "_routing", "_oid")
 
     def __init__(self, region: str, status: str, created_at: float,
                  last_access: float, ttl: float = float("inf"),
@@ -60,6 +62,8 @@ class ReplicaMeta:
         self._index: Optional[ExpiryIndex] = None
         self._ident = None
         self._order = None
+        self._routing = None
+        self._oid = 0
 
     # -- expiry-index binding ------------------------------------------------
     def bind_index(self, index: ExpiryIndex, ident, order) -> None:
@@ -68,16 +72,31 @@ class ReplicaMeta:
         self._index, self._ident, self._order = index, ident, order
         self._reindex()
 
+    def bind_routing(self, matrix, oid: int) -> None:
+        """Attach this replica to the server's :class:`~repro.core.routing.
+        RoutingMatrix`: its cell is written now and kept in sync by every
+        expiry-moving mutation (the same ``_reindex`` funnel the expiry
+        index rides), until :meth:`unbind_index` drops it."""
+        self._routing, self._oid = matrix, oid
+        matrix.set_replica(oid, self.region,
+                           float("inf") if self._pinned else self.expire,
+                           self.size)
+
     def unbind_index(self) -> None:
-        """Detach (replica dropped): cancel the schedule."""
+        """Detach (replica dropped): cancel the schedule + routing cell."""
         if self._index is not None:
             self._index.disarm(self._ident)
         self._index = None
+        if self._routing is not None:
+            self._routing.drop_replica(self._oid, self.region)
+            self._routing = None
 
     def _reindex(self) -> None:
+        exp = float("inf") if self._pinned else self.expire
         if self._index is not None:
-            self._index.arm(self._ident, self._order,
-                            float("inf") if self._pinned else self.expire)
+            self._index.arm(self._ident, self._order, exp)
+        if self._routing is not None:
+            self._routing.set_replica(self._oid, self.region, exp, self.size)
 
     # -- expiry-moving fields (mutations re-index) ---------------------------
     @property
@@ -105,6 +124,15 @@ class ReplicaMeta:
     @pinned.setter
     def pinned(self, value: bool) -> None:
         self._pinned = value
+        self._reindex()
+
+    def touch(self, now: float, ttl: Optional[float] = None) -> None:
+        """Access-time update: set ``last_access`` (and optionally ``ttl``)
+        with ONE re-index instead of the two the property setters would
+        perform back to back -- the GET hot path's TTL re-arm."""
+        self._last_access = now
+        if ttl is not None:
+            self._ttl = ttl
         self._reindex()
 
     @property
@@ -173,6 +201,7 @@ class MetadataServer:
         min_fp_copies: int = 1,
         oracle=None,
         clock=None,
+        routing: str = "auto",
     ) -> None:
         self.cost = cost
         self.mode = mode
@@ -204,6 +233,16 @@ class MetadataServer:
         #: sort key and the id policies key their state by (numeric trace
         #: keys keep their integer value, matching the Simulator).
         self.interner = KeyInterner()
+        #: Array mirror of the committed-replica table for vectorized GET
+        #: routing (repro.core.routing) -- rows keyed by interned oid, kept
+        #: in sync through the ReplicaMeta binding hooks.  Built only in
+        #: last-writer-wins mode: with versioning there is no single "the
+        #: object's replicas" row to mirror, and the batch consumers (trace
+        #: replay) always run LWW.
+        self._routing_engine = resolve_routing_engine(routing)
+        self.routing = (RoutingMatrix(cost)
+                        if not versioning and self._routing_engine == "matrix"
+                        else None)
         #: §6.4 failure plane: regions currently inside an outage window.
         #: The VirtualStore shares this exact set object (region_down /
         #: region_up mutate it), so GET routing, the eviction guards, and
@@ -248,8 +287,11 @@ class MetadataServer:
         is (bucket, key, version, region); the *sort* key is (oid, region)
         -- the exact ordering the simulator's heap uses -- so both planes
         pop coincident expirations identically."""
+        oid = self.interner.intern(key)
         rm.bind_index(self.expiry, (bucket, key, version, rm.region),
-                      (self.interner.intern(key), rm.region))
+                      (oid, rm.region))
+        if self.routing is not None and rm.status == COMMITTED:
+            rm.bind_routing(self.routing, oid)
 
     def _index_add(self, bucket: str, key: str) -> None:
         keys = self._key_index.setdefault(bucket, [])
@@ -438,9 +480,7 @@ class MetadataServer:
             return
         if ttl is None and not rm.pinned:
             ttl = self._object_ttl(bucket, region, self._holders_of(vm), now)
-        rm.last_access = now
-        if not rm.pinned and ttl is not None:
-            rm.ttl = ttl
+        rm.touch(now, ttl if (not rm.pinned and ttl is not None) else None)
 
     def drop_replica(self, bucket: str, key: str, region: str,
                      now: Optional[float] = None,

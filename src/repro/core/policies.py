@@ -474,11 +474,12 @@ class SkyStorePolicy(Policy):
         will already be gone when our TTL expires (``holders`` maps region ->
         expire time; pinned/base replicas report inf)."""
         bkey = self._bkey(ctx.bucket, ctx.size)
-        edge = {
-            s: self.ctl.edge_ttl(bkey, s, ctx.region, ctx.now)
-            for s in holders
-            if s != ctx.region
-        }
+        # One cached table lookup instead of per-holder edge_ttl calls --
+        # identical values and identical refresh timing by the
+        # edge_ttl_table contract (edge TTLs are constant between
+        # refreshes).
+        tbl = self.ctl.edge_ttl_table(bkey, ctx.region, ctx.now)
+        edge = {s: tbl[s] for s in holders if s != ctx.region}
         if not edge:
             return INF
         expires = holders if isinstance(holders, dict) else {s: INF for s in edge}

@@ -64,7 +64,7 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .api import ApiError, GetRequest, PutRequest
-from .backends import InMemoryBackend
+from .backends import HeadResult, InMemoryBackend
 from .costmodel import CostModel, pick_regions
 from .engine import (
     DATA, EPOCH, EXPIRE, REGION_DOWN, REGION_UP, TICK, EventSpine,
@@ -74,6 +74,7 @@ from .ledger import CostLedger, CostReport
 from .metadata import COMMITTED, MetadataServer
 from .oracle import TraceOracle
 from .policies import make_policy
+from .routing import VEC_ROUTE_MIN
 from .simulator import Simulator
 from .traces import Trace
 from .virtual_store import VirtualStore
@@ -224,19 +225,48 @@ class PlaneRun:
 def run_sim_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, outages: Optional[OutageSchedule] = None,
-    **policy_kw,
+    routing: str = "auto", **policy_kw,
 ) -> PlaneRun:
     policy = make_policy(policy_name, cost, **policy_kw)
     sim = Simulator(cost, policy, mode=mode, scan_interval=scan_interval,
-                    track_decisions=True, outages=outages)
+                    track_decisions=True, outages=outages, routing=routing)
     report = sim.run(trace)
     return PlaneRun(report, sim.decisions, sim.replica_holders(),
                     sim.epoch_sets)
 
 
+class _ReplayBackend(InMemoryBackend):
+    """InMemoryBackend with the ETag digest memoized by body identity.
+
+    The replay driver materializes simulated PUT bodies from a per-size
+    cache (see ``_drive_live_spine``), and ``InMemoryBackend`` stores /
+    returns ``bytes`` objects without copying -- so the same body object
+    flows driver -> put -> get -> replication put.  Digesting it once per
+    object identity removes md5 (~13% of live replay time) from the hot
+    path while producing the identical ETag strings; the memo holds a
+    strong reference to each body, which is what keeps ``id()`` keys
+    stable."""
+
+    def __init__(self, region: str):
+        super().__init__(region)
+        self._etags: Dict[int, Tuple[bytes, str]] = {}
+
+    def put(self, bucket, key, data):
+        memo = self._etags.get(id(data))
+        if memo is not None and memo[0] is data:
+            h = HeadResult(key, len(data), memo[1], self._stamp())
+            self._data[(bucket, key)] = (data, h)
+            self.op_counts["put"] += 1
+            self.bytes_in += len(data)
+            return h
+        h = super().put(bucket, key, data)
+        self._etags[id(data)] = (data, h.etag)
+        return h
+
+
 def _make_live_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str,
-    backends: Optional[Dict], **policy_kw,
+    backends: Optional[Dict], routing: str = "auto", **policy_kw,
 ):
     """Build the policy-driven live stack for one replay: store + ledger +
     policy, with a trace-backed :class:`~repro.core.oracle.TraceOracle`
@@ -248,7 +278,8 @@ def _make_live_plane(
     horizon = trace.duration
     policy.reset()
     ledger = CostLedger(cost, policy=policy.name, mode=mode, horizon=horizon)
-    meta = MetadataServer(cost, mode=mode, versioning=False, ledger=ledger)
+    meta = MetadataServer(cost, mode=mode, versioning=False, ledger=ledger,
+                          routing=routing)
     # Key the oracle by the metadata server's interned ids -- identical to
     # the raw trace ids for numeric keys, and correct for traces whose
     # iter_requests rewrites keys to arbitrary strings.
@@ -256,7 +287,7 @@ def _make_live_plane(
                                      interner=meta.interner)
               if policy.requires_oracle else None)
     if backends is None:
-        backends = {r: InMemoryBackend(r) for r in cost.region_names()}
+        backends = {r: _ReplayBackend(r) for r in cost.region_names()}
     store = VirtualStore(cost, backends, meta, mode=mode, policy=policy,
                          ledger=ledger, oracle=oracle)
     for bucket in trace.buckets:
@@ -265,22 +296,37 @@ def _make_live_plane(
 
 
 def _dispatch_live(store: VirtualStore, req, t: float,
-                   decisions: List[Tuple]) -> None:
+                   decisions: List[Tuple], bodies: Optional[Dict] = None,
+                   hints=None, k: int = -1) -> None:
     """One data event on the live plane: materialize simulated PUT bodies,
     dispatch, and record the per-GET routing decision (source region, hit,
     and the policy's placement action off the response).  The simulator
     silently skips requests at missing keys; a live error on the same event
     is a divergence to report, not a crash (hand-authored traces can
-    violate the generator invariants)."""
-    if isinstance(req, PutRequest) and req.body is None:
-        req = dataclasses.replace(req, body=b"\x00" * req.nbytes, size=None)
+    violate the generator invariants).
+
+    ``bodies`` caches one zero-filled body per distinct size, so every PUT
+    of that size stores the *same* bytes object -- which is what lets
+    :class:`_ReplayBackend` memoize the ETag digest by identity (and drops
+    the per-PUT allocation).  ``hints``/``k`` forward the chunk's vectorized
+    routing answers to :meth:`VirtualStore._handle_get`."""
     try:
-        resp = store.dispatch(req)
+        if type(req) is GetRequest:
+            resp = store._handle_get(req, hints, k)
+        else:
+            if isinstance(req, PutRequest) and req.body is None:
+                body = None if bodies is None else bodies.get(req.nbytes)
+                if body is None:
+                    body = b"\x00" * req.nbytes
+                    if bodies is not None:
+                        bodies[req.nbytes] = body
+                req = dataclasses.replace(req, body=body, size=None)
+            resp = store.dispatch(req)
     except ApiError as e:
         decisions.append((t, type(req).__name__, getattr(req, "region", None),
                           f"error:{e.code}", False, "error"))
         return
-    if isinstance(req, GetRequest):
+    if type(req) is GetRequest:
         decisions.append((t, store._obj_id(req.key), req.region,
                           resp.source_region, resp.hit,
                           resp.placement_action))
@@ -317,15 +363,33 @@ def _drive_live_spine(store: VirtualStore, policy, trace: Trace,
     # the identical scalar-equivalent event order.
     expiry = store.meta.expiry
     expire_round = store.expire_replicas
+    routing = store.meta.routing
+    peek_oid = store.meta.interner.peek
+    bodies: Dict[int, bytes] = {}
     for batch in spine.iter_batches():
         kind = batch.kind
         if kind == DATA:
+            hints = None
+            if routing is not None:
+                gets = batch.gets()
+                if len(gets) >= VEC_ROUTE_MIN:
+                    # Unknown keys peek to None -> no row -> per-request
+                    # scalar fallback inside _handle_get.
+                    hints = routing.route_chunk(
+                        [peek_oid(r.key) for r in gets],
+                        [r.region for r in gets],
+                        [r.at for r in gets])
+            k = 0
             for req in batch.requests:
                 t = float(req.at)
                 p = expiry.peek()
                 if p is not None and p <= t:
                     EventSpine.drain_due(expiry, t, expire_round)
-                _dispatch_live(store, req, t, decisions)
+                if type(req) is GetRequest:
+                    _dispatch_live(store, req, t, decisions, bodies, hints, k)
+                    k += 1
+                else:
+                    _dispatch_live(store, req, t, decisions, bodies)
         elif kind == EXPIRE:
             expire_round(batch.pops)
         elif kind == TICK:
@@ -343,7 +407,8 @@ def _drive_live_spine(store: VirtualStore, policy, trace: Trace,
 def run_live_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, backends: Optional[Dict] = None,
-    outages: Optional[OutageSchedule] = None, **policy_kw,
+    outages: Optional[OutageSchedule] = None, routing: str = "auto",
+    **policy_kw,
 ) -> PlaneRun:
     """Drive the live VirtualStore through the trace under virtual time.
 
@@ -353,7 +418,8 @@ def run_live_plane(
     identical order by construction.  Pass ``backends`` to inspect physical
     traffic counters afterwards."""
     store, ledger, policy, horizon = _make_live_plane(
-        trace, cost, policy_name, mode, backends, **policy_kw)
+        trace, cost, policy_name, mode, backends, routing=routing,
+        **policy_kw)
     if outages is None:
         outages = trace.outages
     decisions, epoch_sets = _drive_live_spine(store, policy, trace,
@@ -365,7 +431,8 @@ def run_live_plane(
 def live_replay_throughput(
     trace: Trace, cost: CostModel, policy_name: str = "skystore",
     mode: str = "FB", scan_interval: float = DAY,
-    outages: Optional[OutageSchedule] = None, **policy_kw,
+    outages: Optional[OutageSchedule] = None, routing: str = "auto",
+    **policy_kw,
 ) -> Dict[str, float]:
     """Time one live-plane replay; returns events/sec plus the expiry-index
     counters the benchmark smoke guards on (the events/sec floor is the
@@ -373,7 +440,7 @@ def live_replay_throughput(
     ``outages`` (falling back to ``trace.outages``) times the replay under a
     §6.4 failure schedule -- the chaos-overhead benchmark."""
     store, ledger, policy, horizon = _make_live_plane(
-        trace, cost, policy_name, mode, None, **policy_kw)
+        trace, cost, policy_name, mode, None, routing=routing, **policy_kw)
     if outages is None:
         outages = trace.outages
     t0 = time.perf_counter()
@@ -418,7 +485,7 @@ def replay_differential(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, workload: str = "", max_mismatch_detail: int = 10,
     outages: Optional[OutageSchedule] = None, outage: str = "",
-    **policy_kw,
+    routing: str = "auto", **policy_kw,
 ) -> DiffReport:
     """Replay ``trace`` through both planes and diff every observable.
 
@@ -429,9 +496,9 @@ def replay_differential(
     if outages is None:
         outages = trace.outages
     sim = run_sim_plane(trace, cost, policy_name, mode, scan_interval,
-                        outages=outages, **policy_kw)
+                        outages=outages, routing=routing, **policy_kw)
     live = run_live_plane(trace, cost, policy_name, mode, scan_interval,
-                          outages=outages, **policy_kw)
+                          outages=outages, routing=routing, **policy_kw)
     sim_rep, sim_dec = sim.report, sim.decisions
     live_rep, live_dec = live.report, live.decisions
 

@@ -1,0 +1,365 @@
+"""Array-backed GET routing: vectorized ``choose_get_source`` over DATA chunks.
+
+``api.choose_get_source`` resolves one GET at a time: two dict comprehensions
+(reachable, alive) plus a ``min`` over holder regions.  At replay scale that
+scalar hop dominates the DATA hot loop, so this module keeps the routing
+inputs as dense numpy state and answers a whole chunk of GETs in one masked
+argmin:
+
+* ``price[src, dst]``   -- the region x region egress-price matrix lifted
+  from ``CostModel`` once at construction (prices are immutable per run);
+* ``expire[row, src]``  -- per-object replica-expiry vectors (``-inf`` means
+  "no committed replica", ``+inf`` means pinned/base replica), one row per
+  object id, rows allocated densely on first placement;
+* ``outage[src]``       -- the region-down mask flipped by the chaos plane.
+
+The committed-holder bitmask is not stored separately: it is exactly
+``expire != -inf``, so every mutation is a single cell write.
+
+Decision identity with the scalar path
+--------------------------------------
+The region axis is ``sorted(cost.region_names())``.  The scalar tie-break is
+``min(holders, key=lambda h: (egress_price(h, dst), h))`` -- price first,
+then region *name*.  Because the axis is name-sorted, ``np.argmin``'s
+first-minimum-index plateau discipline (the same convention
+``repro.kernels.ops._canonical_argmin`` pins for the TTL surface) lands on
+exactly the lexicographically-smallest cheapest region.  No tolerance band is
+needed here: both paths read the *same* float from the *same* price table,
+so equal prices are bit-equal, never merely close.
+
+The scalar ``choose_get_source`` survives as the reference oracle, selected
+via ``ROUTING_ENGINES`` exactly like ``ttl_policy.TTL_ENGINES`` selects the
+TTL refresh implementation; tests drive whole replays under both engines and
+assert identical decision streams.
+
+Staleness protocol
+------------------
+Routing for a chunk is computed *at chunk formation time*, but mutations
+(PUT/DELETE/expiry/re-arm) can land mid-chunk before a routed GET dispatches.
+Every row carries a mutation counter (``ver``); ``route_chunk`` snapshots it
+and the consumer honors a hint only while ``ver[row]`` still matches --
+otherwise it falls back to the scalar oracle for that one request.  Outage
+flips and epoch swaps are chunk *boundaries* by spine construction
+(``engine.EventSpine.iter_batches``), so the outage mask can never go stale
+inside a chunk.
+
+One refinement keeps the protocol from degenerating under zipfian skew
+(where the common mutation is a GET re-arming the TTL of the very object the
+next GET reads): a pure expiry update is *decision-invisible* to the rest of
+the chunk when both the old and the new expiry lie beyond the chunk's last
+routed timestamp -- ``expire > now`` then holds for every remaining request
+either way, and neither membership, size, nor the outage mask moved.
+``route_chunk`` records that horizon and :meth:`RoutingMatrix.set_replica`
+skips the version bump exactly in that case; every membership change
+(placement, drop, delete) and every expiry move that could cross a remaining
+request's ``now`` still invalidates.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .costmodel import GB, CostModel
+
+__all__ = [
+    "ROUTING_ENGINES",
+    "ROUTE_OK",
+    "ROUTE_NO_KEY",
+    "ROUTE_UNAVAILABLE",
+    "ROUTE_INVALID",
+    "VEC_ROUTE_MIN",
+    "RouteHints",
+    "RoutingMatrix",
+    "resolve_routing_engine",
+]
+
+#: Routing engine registry, mirroring ``ttl_policy.TTL_ENGINES``: "matrix" is
+#: the vectorized array path, "python" the scalar ``api.choose_get_source``
+#: reference oracle, "auto" resolves to the fastest available ("matrix").
+ROUTING_ENGINES: Tuple[str, ...] = ("auto", "matrix", "python")
+
+#: Per-request route status codes (mirror ``api.choose_get_source``'s
+#: outcomes; INVALID marks entries the consumer must re-route scalar-side).
+ROUTE_OK = 0
+ROUTE_NO_KEY = 1          # no committed replica anywhere -> NoSuchKey
+ROUTE_UNAVAILABLE = 2     # committed holders exist, all down -> ServiceUnavailable
+ROUTE_INVALID = 3         # not routed (unknown object / versioned read / ...)
+
+#: Minimum GETs in a chunk before the vectorized path engages -- same spirit
+#: as the ledger's ``_VEC_CHARGE_MIN``: below this the numpy fixed costs
+#: exceed the scalar loop.  Decision-identical either way.
+VEC_ROUTE_MIN = 8
+
+INF = float("inf")
+_NEG_INF = float("-inf")
+
+
+def resolve_routing_engine(engine: str) -> str:
+    """Validate and resolve a ``ROUTING_ENGINES`` name ("auto" -> "matrix")."""
+    if engine not in ROUTING_ENGINES:
+        raise ValueError(
+            f"unknown routing engine {engine!r}; expected one of {ROUTING_ENGINES}"
+        )
+    return "matrix" if engine == "auto" else engine
+
+
+class RouteHints:
+    """Chunk-formation-time routing answers for the GETs of one DATA chunk.
+
+    Parallel plain-Python lists (``.tolist()``-ed once, so the per-request
+    consume path touches no numpy scalars), indexed by GET ordinal ``k`` --
+    the k-th GET of the chunk, in event order.  ``vers[k]`` snapshots the
+    object's row mutation counter; the consumer must re-check it against the
+    live matrix at dispatch and fall back to the scalar oracle on mismatch.
+
+    ``op_cost[k]`` is valid whenever the entry was routed at all (it depends
+    only on the destination region); ``egress[k]`` and ``srcs``/``hits`` are
+    only meaningful while the snapshot is fresh and ``status[k]`` is
+    ``ROUTE_OK``.
+    """
+
+    __slots__ = ("rows", "vers", "live_ver", "status", "srcs", "hits",
+                 "egress", "op_cost")
+
+    def __init__(self, rows, vers, live_ver, status, srcs, hits, egress,
+                 op_cost):
+        self.rows: List[int] = rows
+        self.vers: List[int] = vers
+        #: The matrix's live counter list (shared reference, not a copy):
+        #: freshness check is ``live_ver[rows[k]] == vers[k]``.
+        self.live_ver: List[int] = live_ver
+        self.status: List[int] = status
+        self.srcs: List[Optional[str]] = srcs
+        self.hits: List[bool] = hits
+        self.egress: List[float] = egress
+        self.op_cost: List[float] = op_cost
+
+
+class RoutingMatrix:
+    """Dense array mirror of the routing-relevant metadata state.
+
+    Owned by whichever plane mutates replicas (``Simulator`` directly;
+    ``MetadataServer`` via ``ReplicaMeta`` binding hooks) and kept
+    incrementally in sync: every committed-replica placement, drop, TTL
+    re-arm and outage flip lands here as one cell write plus a row version
+    bump.  See the module docstring for the staleness protocol.
+    """
+
+    _INITIAL_ROWS = 1024
+
+    def __init__(self, cost: CostModel, unavailable=()) -> None:
+        self.cost = cost
+        # Name-sorted axis: argmin first-index tie-break == (price, name).
+        self.regions: Tuple[str, ...] = tuple(sorted(cost.regions))
+        self.region_index: Dict[str, int] = {
+            r: i for i, r in enumerate(self.regions)
+        }
+        n = len(self.regions)
+        self.price = np.array(
+            [[cost.egress_price(s, d) for d in self.regions] for s in self.regions],
+            dtype=np.float64,
+        )
+        # op_cost(dst, "GET") per destination, for chunk-vectorized charges.
+        self._get_price = np.array(
+            [cost.op_cost(r, "GET") for r in self.regions], dtype=np.float64
+        )
+        self.outage = np.zeros(n, dtype=bool)
+        for r in unavailable:
+            self.outage[self.region_index[r]] = True
+        cap = self._INITIAL_ROWS
+        # expire[row, src]: -inf = absent, +inf = pinned, else replica expiry.
+        self.expire = np.full((cap, n), _NEG_INF, dtype=np.float64)
+        # Object size per row (bytes) -- all live replicas of an object share
+        # the object's current size, so one scalar per row suffices.
+        self.sizes = np.zeros(cap, dtype=np.float64)
+        # Row mutation counters as a plain list: bumped on the scalar hot
+        # path, snapshot/compared as ints.
+        self.ver: List[int] = [0] * cap
+        self.row_of: Dict[int, int] = {}
+        # Last routed timestamp of the chunk currently being consumed (see
+        # "Staleness protocol"): expiry re-arms strictly beyond it on both
+        # sides skip the version bump.  +inf = always bump (safe default
+        # outside chunk consumption).
+        self._chunk_end: float = INF
+
+    # -- row allocation ------------------------------------------------------
+    def _grow(self) -> None:
+        cap = self.expire.shape[0]
+        new = np.full((cap * 2, self.expire.shape[1]), _NEG_INF, dtype=np.float64)
+        new[:cap] = self.expire
+        self.expire = new
+        sizes = np.zeros(cap * 2, dtype=np.float64)
+        sizes[:cap] = self.sizes
+        self.sizes = sizes
+        self.ver.extend([0] * cap)
+
+    def _row(self, oid: int) -> int:
+        row = self.row_of.get(oid)
+        if row is None:
+            row = len(self.row_of)
+            if row >= self.expire.shape[0]:
+                self._grow()
+            self.row_of[oid] = row
+        return row
+
+    # -- incremental sync (the mutation funnel) ------------------------------
+    def set_replica(self, oid: int, region: str, expire: float, size: float,
+                    old: Optional[float] = None) -> None:
+        """A committed replica was placed or its expiry re-armed.
+
+        ``old`` is the cell's previous effective expiry when the caller
+        already knows it (the replica record it just mutated); passing it
+        skips a scalar array read on the mutation hot path.  ``None`` means
+        "read it", not "absent" -- absent is ``-inf``."""
+        row = self._row(oid)
+        j = self.region_index[region]
+        if old is None:
+            old = self.expire[row, j]
+        self.expire[row, j] = expire
+        # Membership adds (old == -inf) always land here; pure re-arms only
+        # bump when the move could flip aliveness for a remaining request.
+        # Object size can only change behind a full drop of the old
+        # replicas (LWW overwrite), so it needs (re)writing only on adds.
+        if old == _NEG_INF:
+            self.sizes[row] = size
+            self.ver[row] += 1
+        elif old <= self._chunk_end or expire <= self._chunk_end:
+            self.ver[row] += 1
+
+    def drop_replica(self, oid: int, region: str) -> None:
+        """A committed replica was evicted/expired/deleted."""
+        row = self.row_of.get(oid)
+        if row is not None:
+            self.expire[row, self.region_index[region]] = _NEG_INF
+            self.ver[row] += 1
+
+    def drop_object(self, oid: int) -> None:
+        """All replicas of an object went away at once (DELETE)."""
+        row = self.row_of.get(oid)
+        if row is not None:
+            self.expire[row, :] = _NEG_INF
+            self.ver[row] += 1
+
+    def set_outage(self, region: str, down: bool) -> None:
+        """Chaos-plane transition.  Always a chunk boundary -- no version
+        bump needed (no chunk's snapshot can straddle the flip)."""
+        self.outage[self.region_index[region]] = down
+
+    # -- vectorized routing --------------------------------------------------
+    def route_batch(
+        self, rows: np.ndarray, dst_idx: np.ndarray, now: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Route N GETs in one shot.
+
+        ``rows`` are matrix row numbers (callers pass 0 for placeholder
+        entries and mask the result via status), ``dst_idx`` region-axis
+        indices, ``now`` request timestamps.  Returns ``(src_idx, hit,
+        status)`` where each element mirrors ``api.choose_get_source``'s
+        decision for the same inputs:
+
+        * committed = expire != -inf; none -> ``ROUTE_NO_KEY``;
+        * reachable = committed minus down regions; none -> ``ROUTE_UNAVAILABLE``;
+        * alive = reachable with expire > now, falling back to all reachable
+          when every reachable copy is expired (serve-stale last resort);
+        * hit iff dst itself is in the alive set, else src = masked argmin
+          of the dst price column (first-index == sorted-name tie-break).
+        """
+        exp = self.expire[rows]                        # [N, R]
+        committed = exp != _NEG_INF
+        reachable = committed & ~self.outage[np.newaxis, :]
+        alive = reachable & (exp > now[:, np.newaxis])
+        has_alive = alive.any(axis=1)
+        use = np.where(has_alive[:, np.newaxis], alive, reachable)
+        n = rows.shape[0]
+        ar = np.arange(n)
+        hit = use[ar, dst_idx]
+        prices = np.where(use, self.price.T[dst_idx], np.inf)
+        src_idx = np.argmin(prices, axis=1)
+        src_idx = np.where(hit, dst_idx, src_idx)
+        status = np.where(
+            committed.any(axis=1),
+            np.where(reachable.any(axis=1), ROUTE_OK, ROUTE_UNAVAILABLE),
+            ROUTE_NO_KEY,
+        )
+        return src_idx, hit, status
+
+    def choose_get_source_batch(
+        self, oids: Sequence[int], dsts: Sequence[str], nows: Sequence[float]
+    ) -> Tuple[List[Optional[str]], List[bool], List[int]]:
+        """Name-level batch façade over :meth:`route_batch`.
+
+        Unknown oids (never placed) report ``ROUTE_NO_KEY``, matching the
+        scalar path's NoSuchKey for an empty committed set.  Returns
+        ``(sources, hits, status)``; ``sources[k]`` is ``None`` unless
+        ``status[k] == ROUTE_OK``.
+        """
+        n = len(oids)
+        row_of = self.row_of
+        rows = np.fromiter(
+            (row_of.get(o, -1) for o in oids), dtype=np.int64, count=n
+        )
+        dst_idx = np.fromiter(
+            (self.region_index[d] for d in dsts), dtype=np.int64, count=n
+        )
+        now = np.asarray(nows, dtype=np.float64)
+        known = rows >= 0
+        src_idx, hit, status = self.route_batch(
+            np.where(known, rows, 0), dst_idx, now
+        )
+        status = np.where(known, status, ROUTE_NO_KEY)
+        regions = self.regions
+        srcs = [
+            regions[s] if st == ROUTE_OK else None
+            for s, st in zip(src_idx.tolist(), status.tolist())
+        ]
+        return srcs, (hit & known & (status == ROUTE_OK)).tolist(), status.tolist()
+
+    # -- chunk hint preparation ---------------------------------------------
+    def route_chunk(
+        self, oids: Sequence[int], dsts: Sequence[str], nows: Sequence[float]
+    ) -> RouteHints:
+        """Prepare :class:`RouteHints` for the GETs of one DATA chunk.
+
+        ``oids[k]``/``dsts[k]``/``nows[k]`` describe the k-th GET in event
+        order.  Besides routing, this precomputes the chunk's charge vectors
+        (the ``_VEC_CHARGE_MIN`` discipline: numpy expressions that mirror
+        the scalar charge formulas term for term, so each element is
+        bit-identical to what ``CostModel.op_cost``/``transfer_cost`` would
+        return -- consumers accumulate them one event at a time, in event
+        order, never via ``np.sum``):
+
+        * ``op_cost[k] = get_price[dst]``                 (op_cost(dst, "GET"))
+        * ``egress[k]  = price[src, dst] * (size / GB)``  (transfer_cost)
+        """
+        n = len(oids)
+        row_of = self.row_of
+        rows = np.fromiter(
+            (row_of.get(o, -1) for o in oids), dtype=np.int64, count=n
+        )
+        dst_idx = np.fromiter(
+            (self.region_index[d] for d in dsts), dtype=np.int64, count=n
+        )
+        now = np.asarray(nows, dtype=np.float64)
+        self._chunk_end = float(now[-1]) if n else INF
+        known = rows >= 0
+        safe_rows = np.where(known, rows, 0)
+        src_idx, hit, status = self.route_batch(safe_rows, dst_idx, now)
+        status = np.where(known, status, ROUTE_INVALID)
+        egress = self.price[src_idx, dst_idx] * (self.sizes[safe_rows] / GB)
+        op_cost = self._get_price[dst_idx]
+        ver = self.ver
+        rows_l = rows.tolist()
+        vers = [ver[r] if r >= 0 else -1 for r in rows_l]
+        regions = self.regions
+        srcs = [regions[s] for s in src_idx.tolist()]
+        return RouteHints(
+            rows_l,
+            vers,
+            ver,
+            status.tolist(),
+            srcs,
+            hit.tolist(),
+            egress.tolist(),
+            op_cost.tolist(),
+        )

@@ -59,11 +59,16 @@ from .ledger import CostReport  # noqa: F401
 from .oracle import TraceOracle
 from .oracle import build_epoch_summaries  # noqa: F401  (moved; re-export)
 from .policies import GetContext, Oracle, Policy
+from .routing import (
+    ROUTE_OK, ROUTE_UNAVAILABLE, VEC_ROUTE_MIN, RouteHints, RoutingMatrix,
+    resolve_routing_engine,
+)
 # Trace op codes live next to EVENT_DTYPE in repro.core.traces; re-exported
 # here for the many historical importers (workloads, tests, benchmarks).
 from .traces import OP_DELETE, OP_GET, OP_HEAD, OP_LIST, OP_PUT  # noqa: F401
 
 INF = float("inf")
+_NEG_INF = float("-inf")
 
 
 @dataclasses.dataclass
@@ -97,6 +102,7 @@ class Simulator:
         track_decisions: bool = False,
         min_fp_copies: int = 1,
         outages: Optional[OutageSchedule] = None,
+        routing: str = "auto",
     ) -> None:
         if mode not in ("FB", "FP"):
             raise ValueError("mode must be FB or FP")
@@ -139,6 +145,15 @@ class Simulator:
         self._open_last: Dict[Tuple[str, str], Dict[int, Tuple[float, float]]] = {}
         self.report = CostReport(policy.name, self.mode)
         self._horizon = 0.0
+        #: Vectorized GET routing (repro.core.routing): dense holder/expiry
+        #: arrays mirroring ``objects``, kept in sync by the replica
+        #: lifecycle below.  ``routing="python"`` pins the scalar
+        #: ``choose_get_source`` oracle (decision-identical by contract;
+        #: tests diff whole replays across the two engines).
+        self._routing_engine = resolve_routing_engine(routing)
+        self.routing: Optional[RoutingMatrix] = (
+            RoutingMatrix(cost) if self._routing_engine == "matrix" else None
+        )
 
     # -- accounting -------------------------------------------------------------
     def _charge_storage(self, obj: ObjectState, rep: Replica, end: float) -> None:
@@ -163,14 +178,20 @@ class Simulator:
     ) -> Replica:
         rep = obj.replicas.get(region)
         if rep is None:
+            old = _NEG_INF
             rep = Replica(region, now, now, ttl, now + ttl, pinned)
             obj.replicas[region] = rep
         else:
+            old = INF if rep.pinned else rep.expire
             rep.last_access, rep.ttl = now, ttl
             rep.expire = now + ttl
             rep.pinned = rep.pinned or pinned
         self.expiry.arm((oid, region), (oid, region),
                         INF if rep.pinned else rep.expire)
+        if self.routing is not None:
+            self.routing.set_replica(oid, region,
+                                     INF if rep.pinned else rep.expire,
+                                     obj.size, old=old)
         return rep
 
     def _drop_replica(self, oid: int, obj: ObjectState, region: str, now: float,
@@ -179,9 +200,22 @@ class Simulator:
         if rep is None:
             return
         self.expiry.disarm((oid, region))
+        if self.routing is not None:
+            self.routing.drop_replica(oid, region)
         self._charge_storage(obj, rep, now)
         if count_eviction:
             self.report.n_evictions += 1
+
+    def _rearm(self, ident: Tuple[int, str], obj: ObjectState, rep: Replica,
+               old: Optional[float] = None) -> None:
+        """Re-schedule a surviving replica's expiry (``rep.expire`` already
+        moved from ``old``; ``None`` = unknown, let the matrix read its own
+        cell), keeping the routing matrix's expiry cell (and row version)
+        in step with the index."""
+        self.expiry.arm(ident, ident, rep.expire)
+        if self.routing is not None:
+            self.routing.set_replica(ident[0], ident[1], rep.expire, obj.size,
+                                     old=old)
 
     def _expire_one(self, t: float, ident: Tuple[int, str]) -> None:
         """React to one expiry popped off the shared index (the spine's
@@ -194,30 +228,33 @@ class Simulator:
         if rep.expire > t:
             # Out-of-band mutation moved the expiry without re-arming
             # (cannot happen through _add_replica); restore the schedule.
-            self.expiry.arm(ident, ident, rep.expire)
+            self._rearm(ident, obj, rep)
             return
         step = max(rep.ttl, 3600.0)
         if region in self.unavailable:
             # §6.4: the region is dark -- the physical delete cannot run.
             # Keep the replica (and keep paying its storage), stepping the
             # expiry until a pop lands after recovery.
+            old = rep.expire
             rep.expire = t + step
-            self.expiry.arm(ident, ident, rep.expire)
+            self._rearm(ident, obj, rep, old)
             return
         if self.mode == "FP" and len(obj.replicas) <= self.min_fp_copies:
             # Never evict the sole copy (§3.2.1) -- re-arm and keep paying.
             # If the new expiry is still due, the index pops it again within
             # the same drain (the old "re-arm until clear" loop).
+            old = rep.expire
             rep.expire = t + step
-            self.expiry.arm(ident, ident, rep.expire)
+            self._rearm(ident, obj, rep, old)
             return
         if self._sole_reachable(obj, region):
             # §6.4 reachable-copy guard: every sibling is in a downed
             # region, so dropping this replica would 503 the object for the
             # rest of the outage even though its data survives.  Refuse --
             # step the expiry exactly like the FP sole-copy guard.
+            old = rep.expire
             rep.expire = t + step
-            self.expiry.arm(ident, ident, rep.expire)
+            self._rearm(ident, obj, rep, old)
             return
         self._drop_replica(oid, obj, region, t, count_eviction=True)
 
@@ -244,7 +281,7 @@ class Simulator:
             if rep is None or rep.pinned:
                 continue
             if rep.expire > texp:
-                self.expiry.arm(ident, ident, rep.expire)
+                self._rearm(ident, obj, rep)
                 continue
             if (region in self.unavailable
                     or (self.mode == "FP"
@@ -252,11 +289,14 @@ class Simulator:
                     or self._sole_reachable(obj, region)):
                 # The §6.4 / §3.2.1 guards of _expire_one, same order: the
                 # replica survives, its expiry steps forward.
+                old = rep.expire
                 rep.expire = texp + max(rep.ttl, 3600.0)
-                self.expiry.arm(ident, ident, rep.expire)
+                self._rearm(ident, obj, rep, old)
                 continue
             obj.replicas.pop(region)
             self.expiry.disarm(ident)
+            if self.routing is not None:
+                self.routing.drop_replica(oid, region)
             self.report.n_evictions += 1
             drops.append((obj, rep, texp))
         if not drops:
@@ -385,7 +425,8 @@ class Simulator:
                 self.cost.get_latency_ms(region, region, size) * 2.0
             )
 
-    def _handle_get(self, op: GetRequest):
+    def _handle_get(self, op: GetRequest, _hints: Optional[RouteHints] = None,
+                    _k: int = -1):
         now, oid = float(op.at), int(op.key)
         region, bucket = op.region, op.bucket
         obj = self.objects.get(oid)
@@ -393,20 +434,55 @@ class Simulator:
             return
         size = obj.size
         # Same §2.3 routing rule the metadata server uses for live GETs,
-        # restricted to reachable regions (§6.4 failover).
-        try:
-            src, hit = choose_get_source(self.holders(obj), region, now,
-                                         self.cost, self.unavailable)
-        except ApiError as e:       # ServiceUnavailable: every holder is dark
-            self.report.n_unavailable += 1
-            if self.track_decisions:
-                # The identical tuple the live driver records for a failed
-                # dispatch, so 503s are part of the differential contract.
-                self.decisions.append((now, "GetRequest", region,
-                                       f"error:{e.code}", False, "error"))
-            return
+        # restricted to reachable regions (§6.4 failover).  When the chunk
+        # was routed through the matrix, honor the hint while its row
+        # version snapshot is still fresh (see repro.core.routing,
+        # "Staleness protocol"); otherwise fall back to the scalar oracle.
+        hinted = False
+        if _hints is not None:
+            row = _hints.rows[_k]
+            if row >= 0 and _hints.live_ver[row] == _hints.vers[_k]:
+                st = _hints.status[_k]
+                if st == ROUTE_OK:
+                    src, hit = _hints.srcs[_k], _hints.hits[_k]
+                    hinted = True
+                elif st == ROUTE_UNAVAILABLE:
+                    # Every holder is dark: the identical outcome (and
+                    # decision tuple) the scalar ApiError branch records.
+                    self.report.n_unavailable += 1
+                    if self.track_decisions:
+                        self.decisions.append(
+                            (now, "GetRequest", region,
+                             "error:ServiceUnavailable", False, "error"))
+                    return
+                # ROUTE_NO_KEY cannot hold on a fresh row while
+                # obj.replicas is non-empty; fall through to the oracle.
+        # Holder map, built at most once per GET: the scalar oracle needs it
+        # for routing, the policy for ttl_on_access.  Nothing mutates the
+        # replica table between the two reads, so sharing it is invisible.
+        holders = None
+        if not hinted:
+            try:
+                holders = self.holders(obj)
+                src, hit = choose_get_source(holders, region, now,
+                                             self.cost, self.unavailable)
+            except ApiError as e:   # ServiceUnavailable: every holder is dark
+                self.report.n_unavailable += 1
+                if self.track_decisions:
+                    # The identical tuple the live driver records for a
+                    # failed dispatch, so 503s are part of the differential
+                    # contract.
+                    self.decisions.append((now, "GetRequest", region,
+                                           f"error:{e.code}", False, "error"))
+                return
         self.report.n_get += 1
-        self._charge_op(region, "GET")
+        if hinted:
+            # Chunk-vector charge, accumulated in event order: the hint's
+            # op_cost element is the same IEEE double _charge_op would add.
+            if self.charge_ops:
+                self.report.ops += _hints.op_cost[_k]
+        else:
+            self._charge_op(region, "GET")
         gap_key = (oid, region)
         prev = self._last_get.get(gap_key)
         gap = (now - prev) if prev is not None else None
@@ -420,19 +496,26 @@ class Simulator:
             # Failover egress: on an outage the cheapest *live* source may
             # be a pricier edge -- the extra network dollars are the §6.4
             # cost of availability, charged identically by both planes.
-            self._charge_transfer(src, region, size)
+            if hinted:
+                # Same discipline as op_cost above: egress[k] is the exact
+                # transfer_cost product, computed as a chunk vector.
+                self.report.network += _hints.egress[_k]
+            else:
+                self._charge_transfer(src, region, size)
             # A downed landing region cannot take the replicate-on-read
             # copy; the policy is not even consulted (both planes agree).
             if region not in self.unavailable and self.policy.cache_on_read(ctx):
                 self.report.n_replications += 1
-                ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
+                ttl = self.policy.ttl_on_access(
+                    ctx, holders if holders is not None else self.holders(obj))
                 if ttl > 0:
                     self._add_replica(oid, obj, region, now, ttl)
                     action = "store"
         else:
             rep = obj.replicas[region]
             if not rep.pinned:
-                ttl = self.policy.ttl_on_access(ctx, self.holders(obj))
+                ttl = self.policy.ttl_on_access(
+                    ctx, holders if holders is not None else self.holders(obj))
                 if (ttl <= 0
                         and (self.mode != "FP"
                              or len(obj.replicas) > self.min_fp_copies)
@@ -524,14 +607,37 @@ class Simulator:
         expire_batch = self._expire_batch
         handlers = {cls: getattr(self, name)
                     for cls, name in self._HANDLERS.items()}
+        # Fresh routing arrays per run: the matrix mirrors self.objects,
+        # which this loop rebuilds from the trace.
+        routing = self.routing
+        if routing is not None:
+            routing = self.routing = RoutingMatrix(self.cost)
+        handle_get = self._handle_get
         for batch in spine.iter_batches():
             kind = batch.kind
             if kind == DATA:
-                for req in batch.requests:
+                reqs = batch.requests
+                hints = None
+                if routing is not None:
+                    gets = batch.gets()
+                    if len(gets) >= VEC_ROUTE_MIN:
+                        # Route the whole chunk's GETs in one masked argmin
+                        # (chunk-formation-time snapshot; per-request
+                        # freshness is re-checked inside _handle_get).
+                        hints = routing.route_chunk(
+                            [int(r.key) for r in gets],
+                            [r.region for r in gets],
+                            [r.at for r in gets])
+                k = 0
+                for req in reqs:
                     p = expiry.peek()
                     if p is not None and p <= req.at:
                         EventSpine.drain_due(expiry, float(req.at),
                                              expire_batch)
+                    if type(req) is GetRequest:
+                        handle_get(req, hints, k)
+                        k += 1
+                        continue
                     h = handlers.get(type(req))
                     if h is None:
                         raise ApiError(
@@ -569,10 +675,14 @@ class Simulator:
     # -- §6.4 failure plane -----------------------------------------------------------
     def _region_down(self, t: float, region: str) -> None:
         self.unavailable.add(region)
+        if self.routing is not None:
+            self.routing.set_outage(region, True)
         self.policy.region_available(region, False, t)
 
     def _region_up(self, t: float, region: str) -> None:
         self.unavailable.discard(region)
+        if self.routing is not None:
+            self.routing.set_outage(region, False)
         self._drain_pending_syncs(t)
         self.policy.region_available(region, True, t)
 

@@ -248,6 +248,11 @@ class AdaptiveTTLController:
         self.hists: Dict[Tuple[str, str], RollingHistogram] = {}
         self.edge_ttls: Dict[Tuple[str, str, str], EdgeTTL] = {}
         self.last_refresh: Dict[Tuple[str, str], float] = {}
+        # (bucket, dst) -> (last_refresh stamp, {src: ttl}): edge TTLs only
+        # move inside _maybe_refresh, so a whole destination's incoming-edge
+        # table can be served from cache between refresh windows (see
+        # edge_ttl_table).
+        self._ttl_tables: Dict[Tuple[str, str], Tuple[float, Dict[str, float]]] = {}
         self.rotate_multiple = rotate_multiple_of_t_even
         if engine not in TTL_ENGINES:
             raise ValueError(f"unknown TTL engine {engine!r}; have {TTL_ENGINES}")
@@ -266,6 +271,14 @@ class AdaptiveTTLController:
         # plane's ingestion hot spot.  RollingHistogram flushes the queue in
         # one vectorized (bit-identical) add_gaps before any estimation read.
         self.hist_for(bucket, region).queue_gap(float(dt), float(size))
+
+    def record_gaps(self, bucket: str, region: str, dts, sizes) -> None:
+        """Chunk-bulk form of :meth:`record_gap` for offline producers.
+
+        NOT used by the replay hot path -- see
+        :meth:`RollingHistogram.queue_gaps` for why chunk-deferred ingestion
+        is decision-unsafe when estimation reads can interleave mid-chunk."""
+        self.hist_for(bucket, region).queue_gaps(dts, sizes)
 
     def record_first_read(self, bucket: str, region: str, size: float, remote: bool) -> None:
         self.hist_for(bucket, region).current.add_first_read(size, remote)
@@ -286,6 +299,34 @@ class AdaptiveTTLController:
         if e is None:
             return self.cost.t_even_seconds(src, dst)
         return e.ttl_seconds
+
+    def edge_ttl_table(self, bucket: str, dst: str, now: float) -> Dict[str, float]:
+        """Every incoming edge's TTL for ``(bucket, dst)`` at ``now`` as one
+        dict ``{src: ttl}`` -- each value exactly what ``edge_ttl(bucket,
+        src, dst, now)`` would return, amortized across the per-GET callers.
+
+        Edge TTLs only change inside :meth:`_maybe_refresh` (refresh or
+        rotate), which is gated on ``refresh_period``; between refreshes the
+        table is constant, so it is cached against the ``last_refresh``
+        stamp and the same period gate the scalar path applies.  This keeps
+        refresh *timing* identical to per-edge ``edge_ttl`` calls: the first
+        read past the period boundary triggers the refresh either way."""
+        key = (bucket, dst)
+        cached = self._ttl_tables.get(key)
+        if cached is not None:
+            last, tbl = cached
+            if now - last < self.refresh_period and self.last_refresh.get(key) == last:
+                return tbl
+        self._maybe_refresh(bucket, dst, now)
+        edge_ttls, t_even = self.edge_ttls, self.cost.t_even_seconds
+        tbl = {}
+        for src in self.cost.regions:
+            if src == dst:
+                continue
+            e = edge_ttls.get((bucket, src, dst))
+            tbl[src] = t_even(src, dst) if e is None else e.ttl_seconds
+        self._ttl_tables[key] = (self.last_refresh[key], tbl)
+        return tbl
 
     def object_ttl(
         self, bucket: str, dst: str, holder_regions, now: float

@@ -73,6 +73,7 @@ from .costmodel import CostModel
 from .ledger import CostLedger
 from .metadata import COMMITTED, MetadataServer
 from .policies import GetContext, Policy
+from .routing import ROUTE_OK
 
 #: Key prefix for internal blobs (multipart spill space, metadata backups).
 MPU_PREFIX = "__skystore_mpu__/"
@@ -363,16 +364,52 @@ class VirtualStore:
             self.meta.commit_replica(bucket, key, target, size, etag,
                                      now, ttl=float("inf"))
 
-    def _handle_get(self, op: GetRequest) -> GetResponse:
+    def _handle_get(self, op: GetRequest, _hints=None,
+                    _k: int = -1) -> GetResponse:
         """Cheapest-source GET + replicate-on-read (§2.3), with ranged and
         conditional variants.
 
         Read-repair (§4.5): if the chosen replica's physical bytes are gone
         (region outage), the stale replica is dropped from metadata and the
-        read retries against the surviving copies."""
+        read retries against the surviving copies.
+
+        ``_hints``/``_k`` are the batched replay driver's vectorized routing
+        answers (:class:`~repro.core.routing.RouteHints`, this GET at ordinal
+        ``_k``): when the row-version snapshot is still fresh the hint
+        replaces :meth:`MetadataServer.locate` outright -- decision-identical
+        by the routing module's argmin/tie-break contract -- and its
+        precomputed charge vector elements feed the ledger.  Any staleness,
+        non-OK status, versioned read, or lost physical bytes falls back to
+        the scalar path below, the reference oracle."""
         now = self._now(op)
         body = full = None
-        for _attempt in range(len(self.backends) + 1):
+        hinted = False
+        if _hints is not None and op.version is None:
+            row = _hints.rows[_k]
+            if (row >= 0 and _hints.live_ver[row] == _hints.vers[_k]
+                    and _hints.status[_k] == ROUTE_OK):
+                vm = self.meta.objects[(op.bucket, op.key)].latest
+                src, hit = _hints.srcs[_k], _hints.hits[_k]
+                check_preconditions(vm.etag, op.if_match, op.if_none_match)
+                rng = resolve_range(op.range_, vm.size)
+                try:
+                    if hit and rng is not None:
+                        body = self.backends[src].get(
+                            op.bucket, self._pkey(op.key, vm.version), rng)
+                    else:
+                        full = self.backends[src].get(
+                            op.bucket, self._pkey(op.key, vm.version))
+                    hinted = True
+                except KeyError:
+                    lost = vm.replicas.pop(src, None)    # read-repair (§4.5)
+                    if lost is not None:
+                        lost.unbind_index()
+                    if self.ledger is not None:
+                        self.ledger.on_replica_drop(op.bucket, op.key, src,
+                                                    now, version=vm.version)
+                    if not vm.replicas:
+                        raise
+        for _attempt in range(0 if hinted else len(self.backends) + 1):
             try:
                 vm, src, hit = self.meta.locate(op.bucket, op.key, op.region,
                                                 now, op.version)
@@ -401,7 +438,8 @@ class VirtualStore:
                 if not vm.replicas:
                     raise
         if self.policy is not None:
-            action = self._policy_get_bookkeeping(op, vm, src, hit, full, now)
+            action = self._policy_get_bookkeeping(
+                op, vm, src, hit, full, now, _hints if hinted else None, _k)
         else:
             action = "keep" if hit else "store"   # built-in replicate-on-read
             if self.ledger is not None:
@@ -464,16 +502,24 @@ class VirtualStore:
             self.backends[region].delete(bucket, self._pkey(key, version))
 
     def _policy_get_bookkeeping(self, op: GetRequest, vm, src: str, hit: bool,
-                                full: Optional[bytes], now: float) -> str:
+                                full: Optional[bytes], now: float,
+                                _hints=None, _k: int = -1) -> str:
         """Mirror of ``Simulator._handle_get``: observe, then replicate-on-
         read / TTL-re-arm / evict exactly as the policy dictates.  Returns
         the placement action taken ("store"/"skip" on a miss, "keep"/"evict"
         on a hit) -- the same label the simulator records per GET, so the
-        replay harness diffs clairvoyant store/evict-now choices too."""
+        replay harness diffs clairvoyant store/evict-now choices too.
+
+        When the GET was served off a fresh routing hint, ``_hints``/``_k``
+        supply the chunk-vectorized GET-op and egress charge values (bit-
+        identical to the scalar formulas; accumulated here in event order)."""
         oid = self._obj_id(op.key)
         if self.ledger is not None:
             self.ledger.count_get(hit)
-            self.ledger.charge_op(op.region, "GET")
+            if _hints is not None:
+                self.ledger.charge_op_value(_hints.op_cost[_k])
+            else:
+                self.ledger.charge_op(op.region, "GET")
         gap_key = (op.bucket, op.key, op.region)
         prev = self._last_get.get(gap_key)
         gap = (now - prev) if prev is not None else None
@@ -487,7 +533,10 @@ class VirtualStore:
             # pricier edge; both planes charge the same one.
             self.transfers.add(self.cost, src, op.region, vm.size)
             if self.ledger is not None:
-                self.ledger.charge_transfer(src, op.region, vm.size)
+                if _hints is not None:
+                    self.ledger.charge_transfer_value(_hints.egress[_k])
+                else:
+                    self.ledger.charge_transfer(src, op.region, vm.size)
             # A downed landing region cannot take the replicate-on-read
             # copy; the policy is not consulted (Simulator._handle_get
             # short-circuits identically).
@@ -573,6 +622,8 @@ class VirtualStore:
         redirect, its replicas are shielded from eviction."""
         now = self._clock() if now is None else now
         self.unavailable.add(region)
+        if self.meta.routing is not None:
+            self.meta.routing.set_outage(region, True)
         if self.policy is not None:
             self.policy.region_available(region, False, now)
 
@@ -582,6 +633,8 @@ class VirtualStore:
         observing holders sees the post-recovery placement."""
         now = self._clock() if now is None else now
         self.unavailable.discard(region)
+        if self.meta.routing is not None:
+            self.meta.routing.set_outage(region, False)
         self._drain_pending_syncs(now)
         if self.policy is not None:
             self.policy.region_available(region, True, now)

@@ -105,3 +105,46 @@ def test_queue_gap_flush_bit_identical_to_direct_adds():
     m = roll.merged()
     np.testing.assert_array_equal(m.hist, direct.hist)
     np.testing.assert_array_equal(m.time_weight, direct.time_weight)
+
+
+def test_queue_gaps_bulk_matches_per_event_queueing():
+    """The chunk-bulk entry (queue_gaps) is bit-identical to the same
+    samples fed one at a time -- including when an estimation read
+    (merged -> flush) lands between chunks, which is exactly the boundary
+    that makes chunk-deferred ingestion unsafe on the replay hot path."""
+    rng = np.random.default_rng(11)
+    dts = rng.uniform(0.5, 1e7, 300)
+    szs = rng.gamma(0.5, 1e8, 300)
+    per_event = RollingHistogram()
+    bulk = RollingHistogram()
+    for lo in range(0, 300, 75):
+        chunk_dt, chunk_sz = dts[lo:lo + 75], szs[lo:lo + 75]
+        for dt, sz in zip(chunk_dt, chunk_sz):
+            per_event.queue_gap(float(dt), float(sz))
+        bulk.queue_gaps(chunk_dt, chunk_sz)
+        per_event.merged()          # interleaved estimation read
+        bulk.merged()
+    a, b = per_event.merged(), bulk.merged()
+    np.testing.assert_array_equal(a.hist, b.hist)
+    np.testing.assert_array_equal(a.time_weight, b.time_weight)
+    assert a.n_samples == b.n_samples == 300
+
+
+def test_controller_record_gaps_bulk_matches_record_gap():
+    from repro.core.costmodel import pick_regions
+    from repro.core.ttl_policy import AdaptiveTTLController
+
+    cost = pick_regions(3)
+    rng = np.random.default_rng(5)
+    dts = rng.uniform(1.0, 1e6, 64)
+    szs = rng.gamma(1.0, 1e7, 64)
+    scalar = AdaptiveTTLController(cost)
+    vector = AdaptiveTTLController(cost)
+    region = cost.region_names()[0]
+    for dt, sz in zip(dts, szs):
+        scalar.record_gap("b", region, float(dt), float(sz))
+    vector.record_gaps("b", region, dts, szs)
+    a = scalar.hist_for("b", region).merged()
+    b = vector.hist_for("b", region).merged()
+    np.testing.assert_array_equal(a.hist, b.hist)
+    np.testing.assert_array_equal(a.time_weight, b.time_weight)

@@ -1,0 +1,280 @@
+"""The array-backed routing plane (repro.core.routing) vs its scalar oracle.
+
+The :class:`RoutingMatrix` routes a whole DATA chunk's GETs with one masked
+argmin over the egress-price matrix; ``api.choose_get_source`` is the scalar
+reference it must be *decision-identical* to -- same source, same hit flag,
+same error class -- over every combination of holder sets, expiries
+(alive / expired-serve-stale / pinned), and §6.4 outage masks.  This suite
+pins that equivalence four ways:
+
+  * a hand-built equal-price regression: ties resolve by sorted region name
+    in BOTH paths (the scalar ``min(key=(price, name))`` vs the matrix's
+    first-index argmin over the canonically sorted region axis);
+  * a seeded numpy fuzz over random holder/expiry/outage combinations;
+  * a hypothesis fuzz over the same space (skipped where hypothesis is not
+    installed, mirroring tests/test_policy_bounds.py);
+  * whole-plane decision-stream identity: both planes replayed engine=matrix
+    vs engine=python on real workloads, outage schedules included.
+
+Plus the staleness protocol: hints prepared by ``route_chunk`` must
+invalidate when the holder set mutates underneath them.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.api import ApiError, choose_get_source
+from repro.core.costmodel import CostModel, Region, pick_regions
+from repro.core.replay import run_live_plane, run_sim_plane
+from repro.core.routing import (
+    ROUTE_NO_KEY, ROUTE_OK, ROUTE_UNAVAILABLE, ROUTING_ENGINES,
+    RoutingMatrix, resolve_routing_engine,
+)
+from repro.core.workloads import make_outage_schedule, make_workload
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+REGIONS = ("aws:a", "aws:b", "gcp:c", "gcp:d")
+INF = float("inf")
+
+
+def _flat_cat(price: float = 0.02) -> CostModel:
+    """Every cross-region edge priced identically: routing is decided
+    purely by the tie-break."""
+    regions = [Region(r, 0.1) for r in REGIONS]
+    eg = {(a, b): price for a in REGIONS for b in REGIONS if a != b}
+    return CostModel(regions, eg)
+
+
+def _scalar(committed, dst, now, cost, unavailable=frozenset()):
+    """choose_get_source folded into the matrix's (src, hit, status) form."""
+    try:
+        src, hit = choose_get_source(committed, dst, now, cost, unavailable)
+        return src, hit, ROUTE_OK
+    except ApiError as e:
+        if e.code == "NoSuchKey":
+            return None, False, ROUTE_NO_KEY
+        assert e.code == "ServiceUnavailable"
+        return None, False, ROUTE_UNAVAILABLE
+
+
+def _check_batch(cost, matrix, cases):
+    """Each case is (oid, committed_dict, dst, now): route the whole batch
+    vectorized and every case scalar, and demand identity."""
+    oids = [c[0] for c in cases]
+    dsts = [c[2] for c in cases]
+    nows = [c[3] for c in cases]
+    down = frozenset(
+        r for r, j in matrix.region_index.items() if matrix.outage[j])
+    srcs, hits, status = matrix.choose_get_source_batch(oids, dsts, nows)
+    for k, (oid, committed, dst, now) in enumerate(cases):
+        want = _scalar(committed, dst, now, cost, down)
+        got = (srcs[k], hits[k], status[k])
+        assert got == want, (
+            f"case {k}: oid={oid} committed={committed} dst={dst} "
+            f"now={now} down={sorted(down)}: matrix={got} scalar={want}")
+
+
+# ---------------------------------------------------------------------------
+# Equal-price tie-break regression (satellite: sorted-region-name contract)
+# ---------------------------------------------------------------------------
+
+def test_equal_price_ties_resolve_by_sorted_region_name():
+    cost = _flat_cat()
+    now = 100.0
+    for holders in (("gcp:d", "aws:b"), ("gcp:c", "gcp:d"),
+                    ("aws:b", "gcp:c", "gcp:d")):
+        committed = {h: INF for h in holders}
+        expect = min(holders)       # equal prices => lexicographic winner
+        src, hit = choose_get_source(committed, "aws:a", now, cost)
+        assert (src, hit) == (expect, False)
+        # Insertion order into the matrix must not matter: build it twice,
+        # forward and reversed, and route the same GET.
+        for order in (holders, tuple(reversed(holders))):
+            m = RoutingMatrix(cost)
+            for h in order:
+                m.set_replica(7, h, INF, 1024.0)
+            srcs, hits, status = m.choose_get_source_batch(
+                [7], ["aws:a"], [now])
+            assert (srcs[0], hits[0], status[0]) == (expect, False, ROUTE_OK)
+
+
+def test_equal_price_tie_break_survives_expiry_last_resort():
+    """All holders expired (serve-stale last resort): the tie still breaks
+    by name, in both paths."""
+    cost = _flat_cat()
+    now = 500.0
+    committed = {"gcp:d": 10.0, "aws:b": 20.0}      # both expired at t=500
+    src, hit = choose_get_source(committed, "gcp:c", now, cost)
+    assert (src, hit) == ("aws:b", False)
+    m = RoutingMatrix(cost)
+    m.set_replica(3, "gcp:d", 10.0, 64.0)
+    m.set_replica(3, "aws:b", 20.0, 64.0)
+    srcs, hits, status = m.choose_get_source_batch([3], ["gcp:c"], [now])
+    assert (srcs[0], hits[0], status[0]) == ("aws:b", False, ROUTE_OK)
+
+
+# ---------------------------------------------------------------------------
+# Seeded numpy fuzz: batch vs scalar loop
+# ---------------------------------------------------------------------------
+
+def _fuzz_cat(rng) -> CostModel:
+    """Asymmetric random egress prices over the 4 test regions."""
+    regions = [Region(r, 0.1) for r in REGIONS]
+    eg = {(a, b): round(float(rng.uniform(0.01, 0.12)), 4)
+          for a in REGIONS for b in REGIONS if a != b}
+    return CostModel(regions, eg)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fuzz_batch_routing_matches_scalar(seed):
+    rng = np.random.default_rng(seed)
+    cost = _fuzz_cat(rng)
+    names = cost.region_names()
+    for _trial in range(12):
+        m = RoutingMatrix(cost)
+        n_down = rng.integers(0, len(names) + 1)
+        down = set(rng.choice(names, size=n_down, replace=False))
+        for r in down:
+            m.set_outage(r, True)
+        cases = []
+        now = 1000.0
+        for oid in range(60):
+            n_hold = int(rng.integers(0, len(names) + 1))
+            holders = rng.choice(names, size=n_hold, replace=False)
+            committed = {}
+            for h in holders:
+                kind = rng.integers(0, 3)
+                exp = (INF if kind == 0 else
+                       float(now + rng.uniform(1.0, 1e6)) if kind == 1 else
+                       float(now - rng.uniform(1.0, 1e6)))   # expired
+                committed[str(h)] = exp
+                m.set_replica(oid, str(h), exp, float(rng.uniform(1, 1e9)))
+            dst = str(rng.choice(names))
+            cases.append((oid, committed, dst, now + float(oid)))
+        _check_batch(cost, m, cases)
+
+
+def test_fuzz_mutation_then_reroute(seed=9):
+    """Drops and re-adds between batches: the matrix's incremental state
+    must keep matching a scalar recomputation from the surviving dicts."""
+    cost = pick_regions(3)
+    names = cost.region_names()
+    rng = np.random.default_rng(seed)
+    m = RoutingMatrix(cost)
+    committed = {oid: {} for oid in range(30)}
+    now = 0.0
+    for _round in range(8):
+        now += 100.0
+        for oid in range(30):
+            for r in names:
+                roll = rng.random()
+                if roll < 0.25:
+                    exp = float(now + rng.uniform(-5e3, 5e3))
+                    committed[oid][r] = exp
+                    m.set_replica(oid, r, exp, 128.0)
+                elif roll < 0.4 and r in committed[oid]:
+                    del committed[oid][r]
+                    m.drop_replica(oid, r)
+        cases = [(oid, committed[oid], str(rng.choice(names)), now)
+                 for oid in range(30)]
+        _check_batch(cost, m, cases)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzz (skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _region_st = st.sampled_from(REGIONS)
+    _expiry_st = st.one_of(
+        st.just(INF),                                   # pinned
+        st.floats(1001.0, 1e7),                         # alive at now=1000
+        st.floats(0.0, 999.0),                          # expired
+    )
+    _holders_st = st.dictionaries(_region_st, _expiry_st, max_size=4)
+    _outage_st = st.frozensets(_region_st, max_size=4)
+
+    @settings(max_examples=200, deadline=None)
+    @given(holders=_holders_st, down=_outage_st, dst=_region_st)
+    def test_hypothesis_single_get_identity(holders, down, dst):
+        cost = _flat_cat(0.05)
+        m = RoutingMatrix(cost)
+        for r in down:
+            m.set_outage(r, True)
+        for r, exp in holders.items():
+            m.set_replica(1, r, exp, 4096.0)
+        now = 1000.0
+        srcs, hits, status = m.choose_get_source_batch([1], [dst], [now])
+        want = _scalar(holders, dst, now, cost, down)
+        assert (srcs[0], hits[0], status[0]) == want
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hypothesis_single_get_identity():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Staleness protocol
+# ---------------------------------------------------------------------------
+
+def test_route_chunk_hints_invalidate_on_membership_change():
+    cost = _flat_cat()
+    m = RoutingMatrix(cost)
+    m.set_replica(5, "aws:b", INF, 256.0)
+    hints = m.route_chunk([5], ["aws:a"], [10.0])
+    row = hints.rows[0]
+    assert hints.status[0] == ROUTE_OK
+    assert hints.live_ver[row] == hints.vers[0]         # fresh
+    m.drop_replica(5, "aws:b")                          # mid-chunk mutation
+    assert hints.live_ver[row] != hints.vers[0]         # hint now stale
+
+
+def test_route_chunk_charge_vectors_mirror_cost_model():
+    cost = pick_regions(3)
+    a, b = cost.region_names()[:2]
+    m = RoutingMatrix(cost)
+    size = 3.5 * 1024**3
+    m.set_replica(2, a, INF, size)
+    hints = m.route_chunk([2], [b], [50.0])
+    assert hints.srcs[0] == a and not hints.hits[0]
+    assert hints.egress[0] == cost.transfer_cost(a, b, size)
+    assert hints.op_cost[0] == cost.op_cost(b, "GET")
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        resolve_routing_engine("simd")
+    assert resolve_routing_engine("auto") in ROUTING_ENGINES
+
+
+# ---------------------------------------------------------------------------
+# Whole-plane decision-stream identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["skystore", "always_evict"])
+@pytest.mark.parametrize("outage", [None, "rolling"])
+def test_plane_decision_streams_identical_across_engines(policy, outage):
+    cost = pick_regions(3)
+    regs = cost.region_names()
+    tr = make_workload("zipfian", regs, seed=7, n_objects=80,
+                       n_requests=1500)
+    sched = (make_outage_schedule(outage, regs, tr.duration, seed=7)
+             if outage else None)
+    sim_m = run_sim_plane(tr, cost, policy, routing="matrix", outages=sched)
+    sim_p = run_sim_plane(tr, cost, policy, routing="python", outages=sched)
+    assert sim_m.decisions == sim_p.decisions
+    assert sim_m.report.components() == sim_p.report.components()
+    live_m = run_live_plane(tr, cost, policy, routing="matrix",
+                            outages=sched)
+    live_p = run_live_plane(tr, cost, policy, routing="python",
+                            outages=sched)
+    assert live_m.decisions == live_p.decisions
+    assert live_m.report.components() == live_p.report.components()
+    assert live_m.holders == live_p.holders
+    # cross-plane: the matrix engines agree with each other too
+    assert sim_m.decisions == live_m.decisions
