@@ -1,5 +1,5 @@
 """Schema + perf-floor diff for the committed BENCH artifact
-(``BENCH_8.json``).
+(``BENCH_9.json``).
 
 CI regenerates the artifact at smoke scale (``--smoke --json-out``) on every
 push; the *values* are machine-dependent throwaways, but the *shape* is the
@@ -21,7 +21,7 @@ Two deliberate exemptions:
 
 Usage::
 
-    PYTHONPATH=src python -m benchmarks.bench_schema BENCH_8.json /tmp/smoke.json
+    PYTHONPATH=src python -m benchmarks.bench_schema BENCH_9.json /tmp/smoke.json
 """
 
 from __future__ import annotations
@@ -79,14 +79,14 @@ def diff_schemas(committed: dict, regenerated: dict) -> list:
                         f"{missing}")
     for extra in sorted(b - a):
         problems.append(f"key path absent from committed artifact "
-                        f"(refresh BENCH_8.json): {extra}")
+                        f"(refresh BENCH_9.json): {extra}")
     return problems
 
 
 def check_floors(committed: dict, regenerated: dict) -> list:
     """The perf gate: the regenerated smoke run's live replay rate must
     clear the floor pinned in the *committed* artifact, so the gate
-    tightens/loosens only through a reviewed refresh of ``BENCH_8.json``,
+    tightens/loosens only through a reviewed refresh of ``BENCH_9.json``,
     never through a drive-by edit of the regenerating code."""
     problems = []
     floor = committed.get("floors", {}).get("smoke_replay_events_per_sec")

@@ -6,10 +6,10 @@ followed by the full human-readable tables.
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --quick    # small sizes
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI canary (~60 s)
-    PYTHONPATH=src python -m benchmarks.run --artifact --json-out BENCH_8.json
+    PYTHONPATH=src python -m benchmarks.run --artifact --json-out BENCH_9.json
 
 ``--smoke --json-out X`` writes the smoke-scale BENCH artifact (CI
-regenerates it, schema-diffs it against the committed ``BENCH_8.json``,
+regenerates it, schema-diffs it against the committed ``BENCH_9.json``,
 and gates the regenerated ``replay_events_per_sec.live`` against the
 committed floor);
 ``--artifact`` runs the full-scale version, including the 1M-event xlarge
@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 from benchmarks import kernel_bench, paper_tables
@@ -35,14 +36,19 @@ from benchmarks import kernel_bench, paper_tables
 #: fast path (or O(objects) per-event work creeping back) trips it.
 SMOKE_REPLAY_EVENTS_PER_SEC_FLOOR = 6000
 
-#: Version stamp of the committed perf artifact (``BENCH_8.json``).  CI
+#: Version stamp of the committed perf artifact (``BENCH_9.json``).  CI
 #: regenerates the artifact at smoke scale via ``--smoke --json-out`` and
 #: fails if the committed copy is missing, its key schema drifted, or the
 #: regenerated live replay rate fell under the committed floor
 #: (``benchmarks.bench_schema``); other values are machine-dependent and
 #: only the committed full-scale run's numbers are meaningful across
 #: checkouts.
-BENCH_VERSION = 8
+BENCH_VERSION = 9
+
+#: The latency stats every latency-tracked replay must produce (§6.3);
+#: the smoke gate fails on a missing key or a non-finite value.
+LATENCY_STAT_KEYS = ("get_mean", "get_p50", "get_p90", "get_p99",
+                     "put_mean", "put_p50", "put_p90", "put_p99")
 
 
 def _emit(name: str, us: float, derived: str) -> None:
@@ -145,6 +151,33 @@ def chaos_matrix(tier: str = "large", repeats: int = 3,
     }
 
 
+def latency_bench(tier: str = "large",
+                  policies=("skystore", "latency_slo"),
+                  **tier_overrides) -> dict:
+    """§6.3 latency plane at tier scale: one differential replay per policy
+    with latency tracking on.  Reports the per-tier p50/p90/p99/mean GET
+    and PUT latency (both planes produce the identical stream, so the sim
+    stats *are* the live stats; ``max_rel_delta`` proving it is part of
+    the artifact and the smoke gate)."""
+    from repro.core.costmodel import pick_regions
+    from repro.core.replay import replay_differential
+    from repro.core.workloads import make_workload
+
+    cat = pick_regions(3)
+    tr = make_workload("zipfian", cat.region_names(), seed=7, tier=tier,
+                       **tier_overrides)
+    pols = {}
+    for pol in policies:
+        r = replay_differential(tr, cat, pol, workload=f"zipfian@{tier}",
+                                track_latency=True)
+        pols[pol] = {
+            "stats": r.latency["sim"],
+            "max_rel_delta": r.latency["max_rel_delta"],
+            "divergence_ok": r.ok(),
+        }
+    return {"tier": tier, "events": len(tr.events), "policies": pols}
+
+
 def xlarge_replay(**tier_overrides) -> dict:
     """The xlarge acceptance run (>= 1M events / >= 100k objects at full
     scale): zipfian@xlarge through both planes with zero divergence, timed
@@ -164,7 +197,8 @@ def xlarge_replay(**tier_overrides) -> dict:
     run_sim_plane(tr, cat, "skystore")
     sim_dt = _time.perf_counter() - t0
     live = live_replay_throughput(tr, cat, "skystore")
-    diff = replay_differential(tr, cat, "skystore", workload="zipfian@xlarge")
+    diff = replay_differential(tr, cat, "skystore", workload="zipfian@xlarge",
+                               track_latency=True)
     return {
         "tier": "xlarge", "events": len(tr.events),
         "objects": tr.stats()["objects"],
@@ -174,6 +208,16 @@ def xlarge_replay(**tier_overrides) -> dict:
         },
         "max_rel_cost_delta": diff.max_rel_cost_delta,
         "divergence_ok": diff.ok(),
+        # §6.3 latency stats ride along on the acceptance differential (no
+        # extra xlarge replay); bench_artifact lifts this into the
+        # per-tier ``latency`` section.
+        "latency": {
+            "skystore": {
+                "stats": diff.latency["sim"],
+                "max_rel_delta": diff.latency["max_rel_delta"],
+                "divergence_ok": diff.ok(),
+            },
+        },
     }
 
 
@@ -252,6 +296,44 @@ def bench_artifact(scale: str = "smoke") -> dict:
           f"live_events_per_sec={xl['replay_events_per_sec']['live']:.0f}")
     if not xl["divergence_ok"]:
         failures.append("xlarge replay: planes diverged on zipfian@xlarge")
+
+    # §6.3 latency plane, per tier: a dedicated large-tier run over the
+    # cost-only and the SLO policy, plus the xlarge stats lifted off the
+    # acceptance differential above.
+    t0 = time.perf_counter()
+    lt = latency_bench(
+        tier="large",
+        **({} if full else dict(n_objects=1000, n_requests=8000)))
+    out["latency"] = {
+        "large": lt,
+        "xlarge": {"tier": "xlarge", "events": xl["events"],
+                   "policies": xl.pop("latency")},
+    }
+    _emit(f"{tag}latency_plane", (time.perf_counter() - t0) * 1e6,
+          f"get_p99={lt['policies']['skystore']['stats']['get_p99']:.1f}ms;"
+          f"slo_get_p99="
+          f"{lt['policies']['latency_slo']['stats']['get_p99']:.1f}ms")
+    for tier_name, ld in out["latency"].items():
+        for pol, d in ld["policies"].items():
+            stats = d.get("stats") or {}
+            missing = [k for k in LATENCY_STAT_KEYS if k not in stats]
+            if missing:
+                failures.append(
+                    f"latency plane [{tier_name}/{pol}]: missing latency "
+                    f"stats {missing}")
+            elif any(not math.isfinite(stats[k]) for k in LATENCY_STAT_KEYS):
+                failures.append(
+                    f"latency plane [{tier_name}/{pol}]: non-finite latency "
+                    f"stat in {stats}")
+            if d.get("max_rel_delta", 1.0) != 0.0:
+                failures.append(
+                    f"latency plane [{tier_name}/{pol}]: sim and live "
+                    f"latency streams are not identical "
+                    f"(max_rel_delta={d.get('max_rel_delta')})")
+            if not d.get("divergence_ok", False):
+                failures.append(
+                    f"latency plane [{tier_name}/{pol}]: planes diverged "
+                    f"under latency tracking")
 
     out["floors"] = {
         "smoke_replay_events_per_sec": SMOKE_REPLAY_EVENTS_PER_SEC_FLOOR,

@@ -374,6 +374,7 @@ NO_OUTAGE: frozenset = frozenset()
 def choose_get_source(
     committed: Mapping[str, float], region: str, now: float, cost,
     unavailable: frozenset = NO_OUTAGE,
+    size: float = 0.0, latency_weight: float = 0.0,
 ) -> Tuple[str, bool]:
     """Route a GET issued from ``region``: local hit if the region holds a
     live committed replica, else the cheapest committed source (§2.3).
@@ -387,6 +388,15 @@ def choose_get_source(
     (the base-region fallback falls out: the pinned base is a holder), and
     raises ``ServiceUnavailable`` (HTTP 503) only when every holding region
     is down.
+
+    ``latency_weight`` is the §6.3 latency-vs-egress knob: with a non-zero
+    weight remote holders are scored ``egress_price + latency_weight *
+    get_latency_ms(src, region, size)`` instead of price alone (ties still
+    resolve by sorted region name).  The default 0.0 takes the price-only
+    path verbatim, so existing decision streams are bit-identical.  This
+    scalar routine is the reference oracle the vectorized
+    :class:`repro.core.routing.RoutingMatrix` must stay decision-identical
+    to at every weight.
     """
     if not committed:
         raise ApiError("NoSuchKey", "no committed replica")
@@ -397,7 +407,9 @@ def choose_get_source(
             f"every replica-holding region is down ({sorted(committed)})")
     alive = {r: e for r, e in reachable.items() if e > now} or reachable
     hit = region in alive
-    return (region if hit else cost.cheapest_source(alive, region)), hit
+    if hit:
+        return region, True
+    return cost.cheapest_source(alive, region, size, latency_weight), False
 
 
 def resolve_put_region(

@@ -129,28 +129,59 @@ class CostModel:
         return (r.put_price if op.upper() in tier1 else r.get_price) * n
 
     # -- latency model (Table 6) --------------------------------------------
-    def get_latency_ms(self, src: str, dst: str, size_bytes: float) -> float:
-        """Estimated GET latency serving ``size_bytes`` from ``src`` into ``dst``."""
+    def latency_params(self, src: str, dst: str) -> Tuple[float, float]:
+        """(ttfb_ms, gbps) for the ``src -> dst`` edge -- the two parameters
+        every latency formula derives from.  This is the ONE owner of the
+        edge classification (intra-region / same-provider / cross-cloud);
+        the dense matrices in :class:`repro.core.routing.RoutingMatrix` are
+        built from these exact floats so the vectorized latency terms are
+        bit-identical to the scalar ones."""
         r = self.regions[src]
         if src == dst:
-            ttfb, gbps = r.first_byte_ms, r.intra_gbps
-        elif r.provider == self.regions[dst].provider:
-            ttfb, gbps = r.first_byte_ms + self.inter_region_rtt_ms, self.inter_gbps
-        else:
-            ttfb, gbps = r.first_byte_ms + self.cross_cloud_rtt_ms, self.inter_gbps
+            return r.first_byte_ms, r.intra_gbps
+        if r.provider == self.regions[dst].provider:
+            return r.first_byte_ms + self.inter_region_rtt_ms, self.inter_gbps
+        return r.first_byte_ms + self.cross_cloud_rtt_ms, self.inter_gbps
+
+    def get_latency_ms(self, src: str, dst: str, size_bytes: float) -> float:
+        """Estimated GET latency serving ``size_bytes`` from ``src`` into ``dst``."""
+        ttfb, gbps = self.latency_params(src, dst)
         return ttfb + (size_bytes * 8.0 / (gbps * 1e9)) * 1e3
+
+    def put_latency_ms(self, src: str, dst: str, size_bytes: float) -> float:
+        """Estimated PUT latency writing ``size_bytes`` from the client at
+        ``src`` into the store at ``dst``: request TTFB + streaming transfer
+        + the commit acknowledgement riding the same edge back."""
+        ttfb, gbps = self.latency_params(src, dst)
+        return ttfb + (size_bytes * 8.0 / (gbps * 1e9)) * 1e3 + ttfb
 
     # -- views ---------------------------------------------------------------
     def region_names(self) -> Tuple[str, ...]:
         return tuple(self.regions)
 
-    def cheapest_source(self, holders: Iterable[str], dst: str) -> str:
-        """Cheapest replica-holding source for a read at ``dst`` (§2.3)."""
+    def cheapest_source(self, holders: Iterable[str], dst: str,
+                        size_bytes: float = 0.0,
+                        latency_weight: float = 0.0) -> str:
+        """Cheapest replica-holding source for a read at ``dst`` (§2.3).
+
+        With ``latency_weight > 0`` each holder is scored
+        ``egress_price + latency_weight * get_latency_ms`` (the
+        latency-vs-egress routing knob); ``latency_weight == 0`` keeps the
+        price-only comparison verbatim, so the default decision stream is
+        bit-identical to the pre-latency plane.  Ties resolve by sorted
+        region name in both scorings -- the contract the vectorized
+        :class:`repro.core.routing.RoutingMatrix` mirrors with a
+        first-index argmin over the canonically sorted region axis."""
         holders = list(holders)
         if not holders:
             raise ValueError("no replica holds the object")
         if dst in holders:
             return dst
+        if latency_weight:
+            return min(holders, key=lambda h: (
+                self.egress_price(h, dst)
+                + latency_weight * self.get_latency_ms(h, dst, size_bytes),
+                h))
         return min(holders, key=lambda h: (self.egress_price(h, dst), h))
 
     def subset(self, names: Sequence[str]) -> "CostModel":

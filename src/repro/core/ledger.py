@@ -72,11 +72,18 @@ class CostReport:
         return self.storage + self.network + self.ops
 
     def latency_stats(self) -> Dict[str, float]:
+        """Latency percentiles over the tracked per-request streams (§6.3).
+
+        Both planes evaluate the one ``CostModel`` latency formula on the
+        same deterministic decision stream, so under replay these stats
+        agree *exactly* across planes, not merely within tolerance -- the
+        invariant ``DiffReport.latency`` pins."""
         out = {}
         for name, xs in (("get", self.get_latency_ms), ("put", self.put_latency_ms)):
             if xs:
                 a = np.asarray(xs)
-                out[f"{name}_avg"] = float(a.mean())
+                out[f"{name}_mean"] = float(a.mean())
+                out[f"{name}_p50"] = float(np.percentile(a, 50))
                 out[f"{name}_p90"] = float(np.percentile(a, 90))
                 out[f"{name}_p99"] = float(np.percentile(a, 99))
         return out
@@ -157,10 +164,12 @@ class CostLedger:
         mode: str = "FB",
         horizon: float = 0.0,
         charge_ops: bool = True,
+        track_latency: bool = False,
     ) -> None:
         self.cost = cost
         self.horizon = horizon
         self.charge_ops = charge_ops
+        self.track_latency = track_latency
         self.report = CostReport(policy, mode)
         self._open: Dict[Tuple[str, str, str], _OpenReplica] = {}
 
@@ -269,6 +278,23 @@ class CostLedger:
     def charge_op_value(self, value: float) -> None:
         if self.charge_ops:
             self.report.ops += value
+
+    # -- latency (§6.3) ------------------------------------------------------
+    # The live half of the latency plane's symmetry discipline: the
+    # simulator appends CostModel.{get,put}_latency_ms at the end of its
+    # GET/PUT handlers, and the VirtualStore records through these two
+    # methods at the mirrored points -- same formula, same (src, dst, size)
+    # stream, so the per-request latency lists are identical across planes
+    # (the RS005 spirit, applied to latency appends).
+    def record_get_latency(self, src: str, dst: str, size: float) -> None:
+        if self.track_latency:
+            self.report.get_latency_ms.append(
+                self.cost.get_latency_ms(src, dst, size))
+
+    def record_put_latency(self, src: str, dst: str, size: float) -> None:
+        if self.track_latency:
+            self.report.put_latency_ms.append(
+                self.cost.put_latency_ms(src, dst, size))
 
     # -- counters ------------------------------------------------------------
     def count_get(self, hit: bool) -> None:

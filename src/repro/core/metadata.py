@@ -202,9 +202,14 @@ class MetadataServer:
         oracle=None,
         clock=None,
         routing: str = "auto",
+        latency_weight: float = 0.0,
     ) -> None:
         self.cost = cost
         self.mode = mode
+        #: §6.3 latency-vs-egress routing knob: GET source selection scores
+        #: holders by ``egress_price + latency_weight * get_latency_ms``.
+        #: Zero keeps the original price-only decision stream bit-identical.
+        self.latency_weight = float(latency_weight)
         #: Injected time source for callers that omit ``now=`` (the
         #: VirtualStore boundary installs its own clock here).  The metadata
         #: server itself never reads the host clock: with no injected clock
@@ -240,7 +245,7 @@ class MetadataServer:
         #: object's replicas" row to mirror, and the batch consumers (trace
         #: replay) always run LWW.
         self._routing_engine = resolve_routing_engine(routing)
-        self.routing = (RoutingMatrix(cost)
+        self.routing = (RoutingMatrix(cost, latency_weight=latency_weight)
                         if not versioning and self._routing_engine == "matrix"
                         else None)
         #: §6.4 failure plane: regions currently inside an outage window.
@@ -410,7 +415,8 @@ class MetadataServer:
         if not committed:
             raise ApiError("NoSuchKey", f"{bucket}/{key} has no committed replica")
         src, hit = choose_get_source(committed, region, now, self.cost,
-                                     self.unavailable)
+                                     self.unavailable, float(vm.size),
+                                     self.latency_weight)
         return vm, src, hit
 
     @staticmethod

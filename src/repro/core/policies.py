@@ -82,6 +82,12 @@ class Policy:
     #: simulator builds one automatically, the live VirtualStore refuses to
     #: construct without one).  SPANStore is the one such policy today.
     epoch: Optional[float] = None
+    #: §6.3 latency-vs-egress GET-routing knob: both planes score candidate
+    #: sources by ``egress_price + latency_weight * get_latency_ms`` (so the
+    #: weight converts milliseconds into dollars).  Zero -- the default for
+    #: every cost-only policy -- keeps the original price-only decision
+    #: stream bit-identical (routing takes the unweighted branch verbatim).
+    latency_weight: float = 0.0
 
     def __init__(self, cost: CostModel):
         self.cost = cost
@@ -507,6 +513,77 @@ class SkyStorePolicy(Policy):
                 self.ctl.set_last_snapshot(bkey, region, ages, sizes)
 
 
+# ---------------------------------------------------------------------------
+# Latency SLO
+# ---------------------------------------------------------------------------
+
+class LatencySLO(Policy):
+    """Minimize cost subject to a p99 GET-latency SLO (§6.3).
+
+    Three levers, all driven by the shared :class:`CostModel` latency
+    formula so both planes decide identically:
+
+      * **latency-aware routing** -- a non-zero ``latency_weight`` makes GET
+        source selection score holders by
+        ``egress_price + latency_weight * get_latency_ms`` instead of price
+        alone, trading a pricier edge for a closer one;
+      * **SLO-gated replicate-on-read** -- a miss is cached locally only
+        when the edge it was served over breaches the SLO (a within-SLO
+        remote read costs nothing extra to repeat);
+      * **pre-replication toward hot readers** -- a PUT is pushed to regions
+        that read this object often (``hot_gets`` observed GETs) *and* would
+        breach the SLO reading from the landing region, so their next read
+        is intra-region before it ever goes remote.
+
+    Cached copies carry a finite T_even TTL (the §3.1.2 break-even bound),
+    keeping the storage bill bounded; the SLO machinery only decides *where*
+    copies appear, never pins them.
+
+    All state is per-object read counters fed by ``observe_get`` -- both
+    planes see the identical GetContext stream, so separate instances stay
+    divergence-free by construction (iteration over hot readers is sorted;
+    replaylint RS003).
+    """
+
+    name = "latency_slo"
+    latency_weight = 1e-3   # 1 ms ~ $0.001 of egress when ranking sources
+
+    def __init__(self, cost: CostModel, slo_ms: float = 100.0,
+                 hot_gets: int = 3):
+        super().__init__(cost)
+        self.slo_ms = float(slo_ms)
+        self.hot_gets = int(hot_gets)
+        self._reads: Dict[Tuple[int, str], int] = {}
+        self._hot: Dict[int, set] = {}
+
+    def reset(self) -> None:
+        self._reads.clear()
+        self._hot.clear()
+
+    def observe_get(self, ctx: GetContext) -> None:
+        key = (ctx.obj, ctx.region)
+        n = self._reads.get(key, 0) + 1
+        self._reads[key] = n
+        if n >= self.hot_gets:
+            self._hot.setdefault(ctx.obj, set()).add(ctx.region)
+
+    def _breaches(self, src: str, dst: str, size: float) -> bool:
+        return self.cost.get_latency_ms(src, dst, size) > self.slo_ms
+
+    def replicate_on_write(self, obj, bucket, region, size, now) -> List[str]:
+        return [
+            r for r in sorted(self._hot.get(obj, ()))
+            if r != region and self._breaches(region, r, size)
+        ]
+
+    def cache_on_read(self, ctx: GetContext) -> bool:
+        return self._breaches(ctx.src_region, ctx.region, ctx.size)
+
+    def ttl_on_access(self, ctx, holders) -> float:
+        srcs = [h for h in holders if h != ctx.region] or [ctx.src_region]
+        return min(self.cost.t_even_seconds(s, ctx.region) for s in srcs)
+
+
 #: Accepted spelling variants (paper text vs. registry names).
 POLICY_ALIASES = {
     "teven": "t_even",
@@ -528,6 +605,7 @@ POLICY_REGISTRY = {
     "skystore": SkyStorePolicy,
     "aws_mrb": aws_multi_region,
     "juicefs": juicefs,
+    "latency_slo": LatencySLO,
 }
 
 

@@ -90,11 +90,12 @@ GOLDEN_RTOL = 1e-9
 #: The full workload x policy evaluation matrix pinned by the golden
 #: regression suite: every policy of the paper's comparison table (§6.2.2)
 #: -- clairvoyant oracles (cgp, spanstore) and replicate-on-write commercial
-#: stand-ins (aws_mrb, juicefs) included -- on every synthetic workload
-#: shape.  5 workloads x 11 policies = 55 fixtures, all zero-divergence.
+#: stand-ins (aws_mrb, juicefs) included, plus the §6.3 latency_slo policy
+#: -- on every synthetic workload shape.  5 workloads x 12 policies = 60
+#: fixtures, all zero-divergence.
 GOLDEN_POLICIES = ("always_evict", "always_store", "t_even", "ewma",
                    "ttl_cc", "ttl_cc_obj", "skystore", "cgp", "spanstore",
-                   "aws_mrb", "juicefs")
+                   "aws_mrb", "juicefs", "latency_slo")
 GOLDEN_WORKLOADS = ("zipfian", "hotspot_shift", "write_heavy", "diurnal",
                     "scan_backup")
 GOLDEN_SEED = 7
@@ -140,6 +141,12 @@ class DiffReport:
     #: runs so the pre-chaos fixtures stay byte-identical.
     outage: str = ""
     availability: Optional[Dict[str, float]] = None
+    #: §6.3 latency-tracked runs only: per-plane p50/p90/p99/mean GET and
+    #: PUT latency ({"sim": stats, "live": stats, "max_rel_delta": float}).
+    #: None when latency tracking is off, so the pre-latency fixtures stay
+    #: byte-identical (the same emit-when-present pattern as
+    #: ``availability``).
+    latency: Optional[Dict] = None
 
     @property
     def n_placement_divergence(self) -> int:
@@ -161,7 +168,9 @@ class DiffReport:
         return (not self.placement_mismatches
                 and not self.holder_mismatches
                 and not self.counter_diffs
-                and self.max_rel_cost_delta <= tol)
+                and self.max_rel_cost_delta <= tol
+                and (self.latency is None
+                     or self.latency["max_rel_delta"] <= tol))
 
     def to_json(self) -> dict:
         out = {
@@ -186,6 +195,11 @@ class DiffReport:
             # schema byte-for-byte.
             out["outage"] = self.outage
             out["availability"] = self.availability
+        if self.latency is not None:
+            # Latency-tracked runs carry the §6.3 differential latency
+            # stats; untracked fixtures keep the pre-latency schema
+            # byte-for-byte.
+            out["latency"] = self.latency
         return out
 
     def summary_line(self) -> str:
@@ -194,6 +208,9 @@ class DiffReport:
                  else self.workload)
         avail = (f" served={self.availability['fraction_served']:.3f}"
                  if self.availability is not None else "")
+        if self.latency is not None:
+            avail += (f" get_p99={self.latency['sim'].get('get_p99', 0.0):.1f}ms"
+                      f" lat_delta={self.latency['max_rel_delta']:.2e}")
         return (f"{status} {label:14s} {self.policy:13s} "
                 f"mode={self.mode} gets={self.n_get_checked} "
                 f"placement_diff={self.n_placement_divergence} "
@@ -225,11 +242,12 @@ class PlaneRun:
 def run_sim_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, outages: Optional[OutageSchedule] = None,
-    routing: str = "auto", **policy_kw,
+    routing: str = "auto", track_latency: bool = False, **policy_kw,
 ) -> PlaneRun:
     policy = make_policy(policy_name, cost, **policy_kw)
     sim = Simulator(cost, policy, mode=mode, scan_interval=scan_interval,
-                    track_decisions=True, outages=outages, routing=routing)
+                    track_decisions=True, outages=outages, routing=routing,
+                    track_latency=track_latency)
     report = sim.run(trace)
     return PlaneRun(report, sim.decisions, sim.replica_holders(),
                     sim.epoch_sets)
@@ -266,7 +284,8 @@ class _ReplayBackend(InMemoryBackend):
 
 def _make_live_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str,
-    backends: Optional[Dict], routing: str = "auto", **policy_kw,
+    backends: Optional[Dict], routing: str = "auto",
+    track_latency: bool = False, **policy_kw,
 ):
     """Build the policy-driven live stack for one replay: store + ledger +
     policy, with a trace-backed :class:`~repro.core.oracle.TraceOracle`
@@ -277,7 +296,8 @@ def _make_live_plane(
     mode = getattr(policy, "mode", None) or mode
     horizon = trace.duration
     policy.reset()
-    ledger = CostLedger(cost, policy=policy.name, mode=mode, horizon=horizon)
+    ledger = CostLedger(cost, policy=policy.name, mode=mode, horizon=horizon,
+                        track_latency=track_latency)
     meta = MetadataServer(cost, mode=mode, versioning=False, ledger=ledger,
                           routing=routing)
     # Key the oracle by the metadata server's interned ids -- identical to
@@ -408,7 +428,7 @@ def run_live_plane(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, backends: Optional[Dict] = None,
     outages: Optional[OutageSchedule] = None, routing: str = "auto",
-    **policy_kw,
+    track_latency: bool = False, **policy_kw,
 ) -> PlaneRun:
     """Drive the live VirtualStore through the trace under virtual time.
 
@@ -419,7 +439,7 @@ def run_live_plane(
     traffic counters afterwards."""
     store, ledger, policy, horizon = _make_live_plane(
         trace, cost, policy_name, mode, backends, routing=routing,
-        **policy_kw)
+        track_latency=track_latency, **policy_kw)
     if outages is None:
         outages = trace.outages
     decisions, epoch_sets = _drive_live_spine(store, policy, trace,
@@ -485,20 +505,28 @@ def replay_differential(
     trace: Trace, cost: CostModel, policy_name: str, mode: str = "FB",
     scan_interval: float = DAY, workload: str = "", max_mismatch_detail: int = 10,
     outages: Optional[OutageSchedule] = None, outage: str = "",
-    routing: str = "auto", **policy_kw,
+    routing: str = "auto", track_latency: bool = False, **policy_kw,
 ) -> DiffReport:
     """Replay ``trace`` through both planes and diff every observable.
 
     ``outages`` (falling back to ``trace.outages``) runs the §6.4 failure
     plane: both planes see the identical REGION_DOWN/REGION_UP stream, and
     the report additionally carries (and both planes must agree on) the
-    availability metric -- fraction of GETs served vs. 503'd."""
+    availability metric -- fraction of GETs served vs. 503'd.
+
+    ``track_latency`` turns on the §6.3 latency plane: both planes record
+    per-GET/per-PUT latency from the one shared CostModel formula, and the
+    report carries the differential p50/p90/p99/mean stats (exact stream
+    identity is the invariant -- same decisions, same edges, same
+    formula)."""
     if outages is None:
         outages = trace.outages
     sim = run_sim_plane(trace, cost, policy_name, mode, scan_interval,
-                        outages=outages, routing=routing, **policy_kw)
+                        outages=outages, routing=routing,
+                        track_latency=track_latency, **policy_kw)
     live = run_live_plane(trace, cost, policy_name, mode, scan_interval,
-                          outages=outages, routing=routing, **policy_kw)
+                          outages=outages, routing=routing,
+                          track_latency=track_latency, **policy_kw)
     sim_rep, sim_dec = sim.report, sim.decisions
     live_rep, live_dec = live.report, live.decisions
 
@@ -557,6 +585,18 @@ def replay_differential(
         if a != b:
             counter_diffs[k] = (a, b)
 
+    latency = None
+    if track_latency:
+        s_stats, l_stats = sim_rep.latency_stats(), live_rep.latency_stats()
+        latency = {
+            "sim": s_stats,
+            "live": l_stats,
+            "max_rel_delta": max(
+                (rel_delta(s_stats.get(k, 0.0), l_stats.get(k, 0.0))
+                 for k in sorted(set(s_stats) | set(l_stats))),
+                default=0.0),
+        }
+
     return DiffReport(
         policy=sim_rep.policy,
         workload=workload or trace.name,
@@ -572,6 +612,7 @@ def replay_differential(
         outage=outage,
         availability=(sim_rep.availability() if outages is not None
                       and len(outages) else None),
+        latency=latency,
     )
 
 
@@ -666,6 +707,15 @@ def check_golden(reports: List[DiffReport], golden_dir: str,
                     problems.append(
                         f"{label}/{r.policy}: availability.{k} drifted "
                         f"{v} -> {b.get(k)}")
+        if want.get("latency") is not None:
+            lw, lg = want["latency"], got.get("latency") or {}
+            for plane in ("sim", "live"):
+                a, b = lw.get(plane) or {}, lg.get(plane) or {}
+                for k, v in a.items():
+                    if k not in b or rel_delta(v, b[k]) > rtol:
+                        problems.append(
+                            f"{label}/{r.policy}: latency.{plane}.{k} "
+                            f"drifted {v} -> {b.get(k)}")
         if not r.ok():
             problems.append(f"{label}/{r.policy}: planes diverged: "
                             f"{r.summary_line()}")

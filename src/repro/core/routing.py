@@ -148,7 +148,8 @@ class RoutingMatrix:
 
     _INITIAL_ROWS = 1024
 
-    def __init__(self, cost: CostModel, unavailable=()) -> None:
+    def __init__(self, cost: CostModel, unavailable=(),
+                 latency_weight: float = 0.0) -> None:
         self.cost = cost
         # Name-sorted axis: argmin first-index tie-break == (price, name).
         self.regions: Tuple[str, ...] = tuple(sorted(cost.regions))
@@ -164,6 +165,21 @@ class RoutingMatrix:
         self._get_price = np.array(
             [cost.op_cost(r, "GET") for r in self.regions], dtype=np.float64
         )
+        #: §6.3 latency-vs-egress knob.  The dense per-(src, dst) latency
+        #: matrices are lifted from the SAME ``CostModel.latency_params``
+        #: floats the scalar ``get_latency_ms`` reads, and the weighted score
+        #: below replicates its expression term for term -- so equal scores
+        #: are bit-equal across the two engines and the first-index argmin
+        #: still lands on the scalar (score, name) tie-break winner.
+        self.latency_weight = float(latency_weight)
+        self.ttfb = np.empty((n, n), dtype=np.float64)
+        # gbps * 1e9, pre-multiplied exactly as the scalar formula groups it.
+        self._gbps9 = np.empty((n, n), dtype=np.float64)
+        for i, s in enumerate(self.regions):
+            for j, d in enumerate(self.regions):
+                ttfb, gbps = cost.latency_params(s, d)
+                self.ttfb[i, j] = ttfb
+                self._gbps9[i, j] = gbps * 1e9
         self.outage = np.zeros(n, dtype=bool)
         for r in unavailable:
             self.outage[self.region_index[r]] = True
@@ -263,7 +279,10 @@ class RoutingMatrix:
         * alive = reachable with expire > now, falling back to all reachable
           when every reachable copy is expired (serve-stale last resort);
         * hit iff dst itself is in the alive set, else src = masked argmin
-          of the dst price column (first-index == sorted-name tie-break).
+          of the dst price column (first-index == sorted-name tie-break) --
+          with a non-zero ``latency_weight`` the column is the weighted
+          score ``price + latency_weight * get_latency_ms`` instead,
+          mirroring ``CostModel.cheapest_source``'s weighted branch.
         """
         exp = self.expire[rows]                        # [N, R]
         committed = exp != _NEG_INF
@@ -274,7 +293,15 @@ class RoutingMatrix:
         n = rows.shape[0]
         ar = np.arange(n)
         hit = use[ar, dst_idx]
-        prices = np.where(use, self.price.T[dst_idx], np.inf)
+        score = self.price.T[dst_idx]
+        if self.latency_weight:
+            # get_latency_ms, same grouping as the scalar formula:
+            # ttfb + (size * 8.0 / (gbps * 1e9)) * 1e3
+            lat = self.ttfb.T[dst_idx] + (
+                self.sizes[rows][:, np.newaxis] * 8.0 / self._gbps9.T[dst_idx]
+            ) * 1e3
+            score = score + self.latency_weight * lat
+        prices = np.where(use, score, np.inf)
         src_idx = np.argmin(prices, axis=1)
         src_idx = np.where(hit, dst_idx, src_idx)
         status = np.where(

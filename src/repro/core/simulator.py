@@ -112,6 +112,11 @@ class Simulator:
         self.scan_interval = scan_interval
         self.charge_ops = charge_ops
         self.track_latency = track_latency
+        #: §6.3 latency-vs-egress routing knob, owned by the policy (the
+        #: latency_slo family sets it; stock policies leave it 0.0, keeping
+        #: the price-only decision stream bit-identical to the pre-latency
+        #: plane).  Read by both the scalar oracle call and the matrix.
+        self.latency_weight = float(getattr(policy, "latency_weight", 0.0))
         self.track_decisions = track_decisions
         #: (t, oid, landing region, source region, hit, action) per GET, for
         #: the differential replay harness (repro.core.replay).  ``action``
@@ -152,7 +157,8 @@ class Simulator:
         #: tests diff whole replays across the two engines).
         self._routing_engine = resolve_routing_engine(routing)
         self.routing: Optional[RoutingMatrix] = (
-            RoutingMatrix(cost) if self._routing_engine == "matrix" else None
+            RoutingMatrix(cost, latency_weight=self.latency_weight)
+            if self._routing_engine == "matrix" else None
         )
 
     # -- accounting -------------------------------------------------------------
@@ -421,9 +427,12 @@ class Simulator:
             self._add_replica(oid, obj, target, now, INF)
 
         if self.track_latency:
+            # The real PUT formula (TTFB + transfer + commit ack) from the
+            # client's origin region into the effective landing region --
+            # the live plane records the identical value at the mirrored
+            # point in VirtualStore._policy_put.
             self.report.put_latency_ms.append(
-                self.cost.get_latency_ms(region, region, size) * 2.0
-            )
+                self.cost.put_latency_ms(op.region, region, size))
 
     def _handle_get(self, op: GetRequest, _hints: Optional[RouteHints] = None,
                     _k: int = -1):
@@ -465,7 +474,8 @@ class Simulator:
             try:
                 holders = self.holders(obj)
                 src, hit = choose_get_source(holders, region, now,
-                                             self.cost, self.unavailable)
+                                             self.cost, self.unavailable,
+                                             size, self.latency_weight)
             except ApiError as e:   # ServiceUnavailable: every holder is dark
                 self.report.n_unavailable += 1
                 if self.track_decisions:
@@ -611,7 +621,8 @@ class Simulator:
         # which this loop rebuilds from the trace.
         routing = self.routing
         if routing is not None:
-            routing = self.routing = RoutingMatrix(self.cost)
+            routing = self.routing = RoutingMatrix(
+                self.cost, latency_weight=self.latency_weight)
         handle_get = self._handle_get
         for batch in spine.iter_batches():
             kind = batch.kind

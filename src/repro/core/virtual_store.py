@@ -204,6 +204,14 @@ class VirtualStore:
                                  f"{self.min_fp_copies}")
         if ledger is not None and self.meta.ledger is None:
             self.meta.ledger = ledger
+        # §6.3: the policy's latency-vs-egress routing knob must reach the
+        # control plane's GET routing (scalar locate AND the routing
+        # matrix), whether the MetadataServer was built here or injected.
+        lw = float(getattr(policy, "latency_weight", 0.0)) if policy else 0.0
+        if lw and self.meta.latency_weight != lw:
+            self.meta.latency_weight = lw
+            if self.meta.routing is not None:
+                self.meta.routing.latency_weight = lw
         self.transfers = TransferLog()
         #: §6.4 failure plane: regions currently down.  This is the *same
         #: set object* the metadata server consults for GET routing and the
@@ -263,6 +271,7 @@ class VirtualStore:
         if self.ledger is not None:
             self.ledger.count_put()
             self.ledger.charge_op(region, "PUT")
+            self.ledger.record_put_latency(op.region, region, float(len(data)))
         version = self.meta.begin_upload(op.bucket, op.key, region,
                                          len(data), now)
         h = self.backends[region].put(op.bucket,
@@ -299,6 +308,10 @@ class VirtualStore:
             op.bucket, op.key, region, size, h.etag, version, stale, now,
             write_to=lambda dst: self.backends[dst].put(op.bucket, pkey, data),
         )
+        if self.ledger is not None:
+            # §6.3: origin -> effective landing region, the same value the
+            # simulator appends at the end of its _handle_put.
+            self.ledger.record_put_latency(op.region, region, float(size))
         return PutResponse(version, h.etag)
 
     def _stale_blobs(self, bucket: str, key: str) -> List[Tuple[str, int]]:
@@ -445,6 +458,7 @@ class VirtualStore:
             if self.ledger is not None:
                 self.ledger.count_get(hit)
                 self.ledger.charge_op(op.region, "GET")
+                self.ledger.record_get_latency(src, op.region, float(vm.size))
                 if not hit:   # replicate-on-read: egress + a new local copy
                     self.ledger.charge_transfer(src, op.region, vm.size)
                     if op.region not in self.unavailable:
@@ -574,6 +588,10 @@ class VirtualStore:
         self._last_get[gap_key] = now
         self._open_last.setdefault((op.bucket, op.region), {})[oid] = (
             now, float(vm.size))
+        if self.ledger is not None:
+            # §6.3: mirrored point of the simulator's end-of-_handle_get
+            # append -- same (src, dst, size) triple, same formula owner.
+            self.ledger.record_get_latency(src, op.region, float(vm.size))
         return action
 
     def last_access_snapshot(self):
@@ -885,6 +903,9 @@ class VirtualStore:
         if self.ledger is not None:
             self.ledger.count_put()
             self.ledger.charge_op(region, "PUT")
+            # Multipart uploads land where they were created: origin ==
+            # landing region, so the latency edge is intra-region.
+            self.ledger.record_put_latency(region, region, float(size))
         stale = self._stale_blobs(bucket, key) if self.policy is not None else []
         version = self.meta.begin_upload(bucket, key, region, size, now)
         pkey = self._pkey(key, version)

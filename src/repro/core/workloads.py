@@ -333,7 +333,7 @@ WORKLOAD_TIERS: Dict[str, Dict[str, dict]] = {
     },
     # The §6.7.3-scale tier: >= 1M events over >= 100k objects.  Replays on
     # BOTH planes with zero divergence (the env-gated xlarge differential in
-    # tests/test_replay_differential.py); BENCH_8.json carries its measured
+    # tests/test_replay_differential.py); BENCH_9.json carries its measured
     # events/sec.  The batched spine (engine.iter_batches) is what makes a
     # 1M-event live replay tractable.
     "xlarge": {

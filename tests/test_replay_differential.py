@@ -297,7 +297,7 @@ if HAVE_HYPOTHESIS:
 # ---------------------------------------------------------------------------
 # xlarge acceptance (PR 7): >= 1M events / >= 100k objects, both planes,
 # zero divergence.  ~4-5 minutes of replay -- gated behind an env flag; the
-# committed BENCH_8.json records the last full run (CI runs the same tier
+# committed BENCH_9.json records the last full run (CI runs the same tier
 # shape at reduced size through `benchmarks.run --smoke`).
 # ---------------------------------------------------------------------------
 

@@ -219,6 +219,112 @@ else:
 
 
 # ---------------------------------------------------------------------------
+# Latency-weighted routing: batch vs scalar (§6.3)
+# ---------------------------------------------------------------------------
+
+def _scalar_lat(committed, dst, now, cost, size, lw, unavailable=frozenset()):
+    """choose_get_source with the latency knob, folded into the matrix's
+    (src, hit, status) form."""
+    try:
+        src, hit = choose_get_source(committed, dst, now, cost, unavailable,
+                                     size, lw)
+        return src, hit, ROUTE_OK
+    except ApiError as e:
+        if e.code == "NoSuchKey":
+            return None, False, ROUTE_NO_KEY
+        assert e.code == "ServiceUnavailable"
+        return None, False, ROUTE_UNAVAILABLE
+
+
+def test_equal_weighted_score_ties_resolve_by_sorted_region_name():
+    """Holders in the same latency class of the destination (so weighted
+    scores are bit-equal, not merely close): the tie still breaks by sorted
+    region name in BOTH paths, at every weight."""
+    cost = _flat_cat()
+    now, size = 100.0, 64 * 1024.0
+    for dst, holders in (("aws:a", ("gcp:d", "gcp:c")),   # both cross-cloud
+                         ("gcp:d", ("aws:b", "aws:a"))):
+        committed = {h: INF for h in holders}
+        for lw in (0.0, 1e-6, 1e-3, 0.05):
+            expect = min(holders)
+            src, hit = choose_get_source(committed, dst, now, cost,
+                                         frozenset(), size, lw)
+            assert (src, hit) == (expect, False), (dst, lw)
+            for order in (holders, tuple(reversed(holders))):
+                m = RoutingMatrix(cost, latency_weight=lw)
+                for h in order:
+                    m.set_replica(7, h, INF, size)
+                srcs, hits, status = m.choose_get_source_batch(
+                    [7], [dst], [now])
+                assert (srcs[0], hits[0], status[0]) == \
+                    (expect, False, ROUTE_OK), (dst, lw, order)
+
+
+@pytest.mark.parametrize("lw", [0.0, 1e-6, 1e-3, 0.05])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fuzz_latency_weighted_batch_matches_scalar(seed, lw):
+    """Seeded fuzz over holders x expiries x outages x latency_weight:
+    the matrix's weighted argmin and the scalar weighted min pick identical
+    sources (and at lw=0 both reduce to the original cheapest-source)."""
+    rng = np.random.default_rng(100 + seed)
+    cost = _fuzz_cat(rng)
+    names = cost.region_names()
+    now = 1000.0
+    for _trial in range(8):
+        m = RoutingMatrix(cost, latency_weight=lw)
+        n_down = rng.integers(0, len(names) + 1)
+        down = set(rng.choice(names, size=n_down, replace=False))
+        for r in down:
+            m.set_outage(r, True)
+        cases = []
+        for oid in range(50):
+            # One size per object: the matrix keys its latency term off the
+            # per-row size, exactly like the scalar call site does.
+            size = float(rng.uniform(1.0, 2e9))
+            n_hold = int(rng.integers(0, len(names) + 1))
+            holders = rng.choice(names, size=n_hold, replace=False)
+            committed = {}
+            for h in holders:
+                kind = rng.integers(0, 3)
+                exp = (INF if kind == 0 else
+                       float(now + rng.uniform(1.0, 1e6)) if kind == 1 else
+                       float(now - rng.uniform(1.0, 1e6)))
+                committed[str(h)] = exp
+                m.set_replica(oid, str(h), exp, size)
+            cases.append((oid, committed, str(rng.choice(names)),
+                          now + float(oid), size))
+        oids = [c[0] for c in cases]
+        dsts = [c[2] for c in cases]
+        nows = [c[3] for c in cases]
+        srcs, hits, status = m.choose_get_source_batch(oids, dsts, nows)
+        for k, (oid, committed, dst, t, size) in enumerate(cases):
+            want = _scalar_lat(committed, dst, t, cost, size, lw, down)
+            got = (srcs[k], hits[k], status[k])
+            assert got == want, (
+                f"case {k}: lw={lw} committed={committed} dst={dst} "
+                f"size={size}: matrix={got} scalar={want}")
+
+
+def test_zero_weight_is_bitwise_the_price_only_path():
+    """lw=0 must not merely approximate the old decision stream -- it takes
+    the unweighted branch verbatim in both paths (no latency term at all)."""
+    rng = np.random.default_rng(42)
+    cost = _fuzz_cat(rng)
+    m0 = RoutingMatrix(cost)                       # pre-latency construction
+    mz = RoutingMatrix(cost, latency_weight=0.0)
+    for oid in range(20):
+        for r in rng.choice(cost.region_names(), size=2, replace=False):
+            exp = float(1000.0 + rng.uniform(-500, 500))
+            m0.set_replica(oid, str(r), exp, 512.0)
+            mz.set_replica(oid, str(r), exp, 512.0)
+    oids = list(range(20))
+    dsts = [str(r) for r in rng.choice(cost.region_names(), size=20)]
+    nows = [1000.0] * 20
+    assert m0.choose_get_source_batch(oids, dsts, nows) == \
+        mz.choose_get_source_batch(oids, dsts, nows)
+
+
+# ---------------------------------------------------------------------------
 # Staleness protocol
 # ---------------------------------------------------------------------------
 
